@@ -1,0 +1,22 @@
+"""Core library: the paper's in-memory-computing accelerator in JAX.
+
+Modules mirror the chip's block diagram (paper Figs. 1, 2):
+
+* :mod:`repro.core.quant`    — BP/BS bit-plane codings (XNOR / AND).
+* :mod:`repro.core.cima`     — charge-domain column physics model.
+* :mod:`repro.core.adc`      — 8-b SAR ADC and binarizing ABN.
+* :mod:`repro.core.bpbs`     — bit-parallel/bit-serial multi-bit MVM.
+* :mod:`repro.core.sparsity` — Sparsity/AND-logic Controller.
+* :mod:`repro.core.datapath` — near-memory digital post-reduce pipeline.
+* :mod:`repro.core.cimu`     — user-facing CIMU matmul (+ STE training).
+* :mod:`repro.core.energy`   — measured pJ/cycle/bandwidth cost model.
+* :mod:`repro.core.sqnr`     — Fig. 7 SQNR analysis.
+"""
+from .bpbs import BpbsConfig, bpbs_matmul_int
+from .cimu import CimuConfig, cimu_matmul
+from .quant import Coding, quantize, int_to_planes, planes_to_int, plane_weights
+
+__all__ = [
+    "BpbsConfig", "bpbs_matmul_int", "CimuConfig", "cimu_matmul",
+    "Coding", "quantize", "int_to_planes", "planes_to_int", "plane_weights",
+]

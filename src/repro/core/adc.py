@@ -1,0 +1,103 @@
+"""Per-column 8-b SAR ADC and binarizing ABN models (paper Figs. 2, 5, 10).
+
+The CIMA column produces an analog voltage proportional to the column
+popcount ``p`` (number of bit cells whose local capacitor holds a '1'),
+with ``p`` in ``[0, full_scale]`` where ``full_scale`` is the number of
+capacitors participating in the charge share (set statically by CIMA bank
+activity-gating, or — with ``adaptive range`` sparsity control — by the
+number of unmasked rows, since the Sparsity/AND-logic Controller knows the
+mask before the CIMA evaluation fires).
+
+The SAR ADC digitizes that voltage to ``2^adc_bits`` codes.  When
+``full_scale <= codes - 1`` every level is resolved and integer compute is
+emulated EXACTLY (paper §3); otherwise the conversion is a uniform
+quantizer with step ``full_scale / (codes - 1)`` — the source of the SQNR
+behaviour of Fig. 7.
+
+``sigma_lsb`` adds Gaussian noise (in LSB units) before code decision to
+model residual analog non-ideality; Fig. 10's measured column transfer
+functions bound it to a fraction of an LSB, so the default is 0.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def adc_codes(adc_bits: int = 8) -> int:
+    return 2 ** adc_bits
+
+
+def adc_convert(
+    p: jax.Array,
+    full_scale: jax.Array,
+    adc_bits: int = 8,
+    sigma_lsb: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Analog column value ``p`` -> integer ADC code in ``[0, 2^bits - 1]``."""
+    cmax = float(adc_codes(adc_bits) - 1)
+    fs = jnp.maximum(jnp.asarray(full_scale, dtype=jnp.float32), 1.0)
+    x = jnp.clip(p.astype(jnp.float32), 0.0, fs) * (cmax / fs)
+    if sigma_lsb and key is not None:
+        x = x + sigma_lsb * jax.random.normal(key, x.shape, dtype=jnp.float32)
+    return jnp.clip(jnp.round(x), 0.0, cmax)
+
+
+def adc_reconstruct(
+    code: jax.Array, full_scale: jax.Array, adc_bits: int = 8
+) -> jax.Array:
+    """ADC code -> reconstructed (integer) popcount estimate ``p_hat``."""
+    cmax = float(adc_codes(adc_bits) - 1)
+    fs = jnp.maximum(jnp.asarray(full_scale, dtype=jnp.float32), 1.0)
+    return jnp.round(code * (fs / cmax))
+
+
+def adc_quantize_sum(
+    p: jax.Array,
+    full_scale: jax.Array,
+    adc_bits: int = 8,
+    sigma_lsb: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full convert->reconstruct path: the quantization the ADC imposes on ``p``.
+
+    Identity for integer ``p`` whenever ``full_scale <= 2^adc_bits - 1``.
+    """
+    code = adc_convert(p, full_scale, adc_bits, sigma_lsb, key)
+    return adc_reconstruct(code, full_scale, adc_bits)
+
+
+def abn_binarize(
+    p: jax.Array,
+    threshold_code: jax.Array,
+    full_scale: jax.Array,
+    dac_bits: int = 6,
+    sigma_lsb: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Analog Batch-Norm: compare column value against a 6-b DAC reference.
+
+    Returns {-1, +1} (BNN activation).  ``threshold_code`` indexes the DAC's
+    ``2^dac_bits`` reference levels spanning the column full scale.
+    """
+    dmax = float(2 ** dac_bits - 1)
+    fs = jnp.maximum(jnp.asarray(full_scale, dtype=jnp.float32), 1.0)
+    thresh = jnp.asarray(threshold_code, dtype=jnp.float32) * (fs / dmax)
+    x = p.astype(jnp.float32)
+    if sigma_lsb and key is not None:
+        x = x + sigma_lsb * (fs / 255.0) * jax.random.normal(
+            key, x.shape, dtype=jnp.float32
+        )
+    return jnp.where(x >= thresh, 1.0, -1.0)
+
+
+def abn_threshold_code(
+    threshold_p: jax.Array, full_scale: jax.Array, dac_bits: int = 6
+) -> jax.Array:
+    """Quantize a desired popcount threshold onto the 6-b DAC grid."""
+    dmax = float(2 ** dac_bits - 1)
+    fs = jnp.maximum(jnp.asarray(full_scale, dtype=jnp.float32), 1.0)
+    return jnp.clip(jnp.round(threshold_p * (dmax / fs)), 0.0, dmax)

@@ -1,0 +1,180 @@
+"""Bit-parallel / bit-serial (BP/BS) multi-bit MVM (paper Fig. 4).
+
+The B_A bits of each matrix element map to parallel CIMA columns; the B_X
+bits of each input element are applied serially.  Every (bit-column,
+bit-step) pair yields one mixed-signal column evaluation whose popcount is
+digitized by the per-column ADC, then barrel-shifted by its joint
+significance and accumulated by the near-memory digital datapath — in
+time (over kx) and space (over ka).
+
+Two implementations, which agree bit-for-bit (asserted in tests):
+
+* the *physics* path through :mod:`repro.core.cima` (cell-by-cell), and
+* the *fast* path below, which uses the GEMM identity
+  ``d = sum_n m_n * s_a * s_x  =  2p - n_unmasked`` (XNOR) / ``d = p``
+  (AND) so each plane-pair evaluation is one (masked) matmul followed by
+  an affine map, the ADC model, and the inverse affine map.
+
+Banking: the N (input) dimension is split into banks of ``bank_n`` rows
+(2304 on the chip).  Each bank is a separate charge-share + ADC conversion;
+bank partials are summed digitally.  This is exactly how the chip's 4x4
+activity-gated banks compose larger dimensionalities, and it makes the
+quantization boundary explicit for the roofline/kernel layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .adc import adc_quantize_sum
+from .quant import Coding, int_to_planes, plane_weights
+from .sparsity import element_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class BpbsConfig:
+    """Static configuration of one CIMU MVM."""
+
+    ba: int = 4                    # matrix-element bits (parallel columns)
+    bx: int = 4                    # input-element bits (serial steps)
+    coding: Coding = Coding.XNOR
+    bank_n: int = 2304             # rows per charge-share/ADC boundary
+    adc_bits: int = 8
+    adc_sigma_lsb: float = 0.0     # analog non-ideality (Fig 10), LSB units
+    adaptive_range: bool = False   # ADC full-scale tracks unmasked rows
+    ideal_adc: bool = False        # bypass the ADC (bit-true integer compute)
+
+    def __post_init__(self):
+        object.__setattr__(self, "coding", Coding(self.coding))
+
+    @property
+    def wa(self):
+        return plane_weights(self.ba, self.coding)
+
+    @property
+    def wx(self):
+        return plane_weights(self.bx, self.coding)
+
+
+def weight_planes(w_q: jax.Array, cfg: BpbsConfig) -> jax.Array:
+    """Matrix-element bit planes, shape [N, M, B_A] (column-parallel layout)."""
+    return int_to_planes(w_q, cfg.ba, cfg.coding)
+
+
+def input_planes(x_q: jax.Array, cfg: BpbsConfig) -> tuple[jax.Array, jax.Array]:
+    """Input bit planes [..., N, B_X] with the controller mask folded in.
+
+    Returns ``(planes, mask)``.  XNOR planes of masked (zero-valued)
+    elements are zeroed — the capacitor-reset behaviour; AND planes of
+    zero elements are all-zero by construction.
+    """
+    planes = int_to_planes(x_q, cfg.bx, cfg.coding)
+    mask = element_mask(x_q)
+    if cfg.coding == Coding.XNOR:
+        planes = planes * mask[..., None]
+    return planes, mask
+
+
+def bpbs_matmul_int(
+    x_q: jax.Array,               # [..., N] integers on the coding grid
+    w_q: jax.Array,               # [N, M]   integers on the coding grid
+    cfg: BpbsConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """BP/BS MVM on the integer grids: returns [..., M] (float32, integer-valued
+    when ``adc_sigma_lsb == 0``).  Matches ``x_q @ w_q`` exactly whenever the
+    per-bank column dynamic range fits the ADC (paper §3)."""
+    xs, mask = input_planes(x_q, cfg)           # [..., N, BX], [..., N]
+    wp = weight_planes(w_q, cfg)                 # [N, M, BA]
+    n = x_q.shape[-1]
+    wxv = jnp.asarray(cfg.wx, dtype=jnp.float32)
+    wav = jnp.asarray(cfg.wa, dtype=jnp.float32)
+
+    from repro.distributed.autoshard import cs
+
+    y = jnp.zeros(x_q.shape[:-1] + (w_q.shape[-1],), dtype=jnp.float32)
+    n_banks = -(-n // cfg.bank_n)
+    for b in range(n_banks):
+        s, e = b * cfg.bank_n, min((b + 1) * cfg.bank_n, n)
+        # planes are exactly representable in bf16 (+-1/0/1 and {0,1});
+        # halving the streamed bytes of the dominant GEMM is free accuracy-wise
+        xb = xs[..., s:e, :].astype(jnp.bfloat16)
+        wb = wp[s:e].astype(jnp.bfloat16)
+        mb = mask[..., s:e]
+        nu = jnp.sum(mb, axis=-1)                # [...] unmasked rows in bank
+        # one GEMM per bank covering all (kx, ka) plane pairs.  Formulated
+        # as a plain 2-D matmul [T*BX, N] @ [N, M*BA] — the chip's own
+        # column-parallel layout — so it inherits the digital path's
+        # sharding behaviour (N: FSDP, M*BA: TP).  The 4-D einsum form left
+        # XLA all-reducing the full [tokens, BX, M, BA] tensor over the
+        # data axis (§Perf cell c, iteration 1).
+        lead = xb.shape[:-2]
+        t = 1
+        for dim in lead:
+            t *= dim
+        nb, m = e - s, w_q.shape[-1]
+        x2 = jnp.swapaxes(xb, -1, -2).reshape(t * cfg.bx, nb)
+        w2 = wb.reshape(nb, m * cfg.ba)
+        # gather the (tiny, bf16) weight planes over the FSDP axis up front:
+        # left to itself the partitioner all-reduces the full f32
+        # [T*BX, M*BA] partial products over "data" — 4.3 GB vs the 33 MB
+        # plane gather (§Perf cell c, iterations 1-2)
+        w2 = cs(w2, (None, ["tp"]))
+        d2 = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
+        d = d2.reshape(*lead, cfg.bx, m, cfg.ba)
+        if cfg.coding == Coding.XNOR:
+            p = (d + nu[..., None, None, None]) / 2.0
+        else:
+            p = d
+        if cfg.ideal_adc:
+            p_hat = p
+        else:
+            fs = nu if cfg.adaptive_range else float(e - s)
+            fs = fs[..., None, None, None] if cfg.adaptive_range else fs
+            subkey = None
+            if key is not None:
+                key, subkey = jax.random.split(key)
+            p_hat = adc_quantize_sum(
+                p, fs, cfg.adc_bits, cfg.adc_sigma_lsb, subkey
+            )
+        if cfg.coding == Coding.XNOR:
+            d_hat = 2.0 * p_hat - nu[..., None, None, None]
+        else:
+            d_hat = p_hat
+        # near-memory datapath: barrel shift (plane weights) + accumulate
+        y = y + jnp.einsum("...xma,x,a->...m", d_hat, wxv, wav)
+    return y
+
+
+def bpbs_matmul_int_reference(
+    x_q: jax.Array, w_q: jax.Array, cfg: BpbsConfig
+) -> jax.Array:
+    """Physics-path reference via the cell-level CIMA model (slow; tests only)."""
+    from . import cima
+
+    xs, mask = input_planes(x_q, cfg)
+    # NOTE: for the cell model, XNOR planes must stay +-1 and masking is a
+    # separate signal; recompute unmasked planes here.
+    planes = int_to_planes(x_q, cfg.bx, cfg.coding)
+    wp = weight_planes(w_q, cfg)                 # [N, M, BA]
+    n, m = w_q.shape
+    wxv = jnp.asarray(cfg.wx, dtype=jnp.float32)
+    wav = jnp.asarray(cfg.wa, dtype=jnp.float32)
+    y = jnp.zeros(x_q.shape[:-1] + (m,), dtype=jnp.float32)
+    for b in range(-(-n // cfg.bank_n)):
+        s, e = b * cfg.bank_n, min((b + 1) * cfg.bank_n, n)
+        nu = jnp.sum(mask[..., s:e], axis=-1)
+        for ka in range(cfg.ba):
+            for kx in range(cfg.bx):
+                p = cima.column_popcount(
+                    wp[s:e, :, ka], planes[..., s:e, kx], mask[..., s:e], cfg.coding
+                )
+                if not cfg.ideal_adc:
+                    fs = nu[..., None] if cfg.adaptive_range else float(e - s)
+                    p = adc_quantize_sum(p, fs, cfg.adc_bits)
+                d = cima.signed_dot_from_popcount(p, nu[..., None], cfg.coding)
+                y = y + wxv[kx] * wav[ka] * d
+    return y

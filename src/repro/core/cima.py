@@ -1,0 +1,66 @@
+"""Charge-domain Compute-In-Memory Array (CIMA) column model (paper Figs. 2, 3).
+
+This is the *physics-level* reference: it models exactly what one CIMA
+evaluation does, bit cell by bit cell, for one pair of bit planes:
+
+1. Reset: all local capacitors in a column are shorted and discharged.
+2. Local compute: every cell produces a binary output ``o = XNOR(a, x)``
+   (or ``AND(a, x)``) stored as charge on its local MOM capacitor.  Cells
+   whose input is masked by the Sparsity/AND-logic Controller never fire:
+   their capacitor stays in the reset state (``o = 0``).
+3. Accumulate: all capacitors are shorted; the column voltage is
+   ``V = p / n_caps * Vdd`` with ``p`` the column popcount.
+
+The fast path in :mod:`repro.core.bpbs` computes the same ``p`` via a
+single GEMM identity and MUST agree bit-for-bit with this model — that is
+asserted by tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from .quant import Coding
+
+
+def cell_outputs(
+    a_bits: jax.Array,   # [N, M] stored plane, {0,1} (AND) or {-1,+1} (XNOR)
+    x_bits: jax.Array,   # [..., N] broadcast plane, same alphabet
+    mask: jax.Array,     # [..., N] 1 = broadcast, 0 = gated by the controller
+    coding: Coding,
+) -> jax.Array:
+    """Binary cell outputs ``o`` in {0,1}: the charge on each local cap."""
+    coding = Coding(coding)
+    x = x_bits[..., :, None]          # [..., N, 1]
+    m = mask[..., :, None]
+    a = a_bits                        # [N, M]
+    if coding == Coding.XNOR:
+        o = jnp.where(a * x > 0, 1.0, 0.0)   # XNOR of +-1 alphabets
+    else:
+        o = a * x                            # AND of {0,1} alphabets
+    return o * m                             # masked cells stay reset
+
+
+def column_popcount(
+    a_bits: jax.Array,
+    x_bits: jax.Array,
+    mask: jax.Array,
+    coding: Coding,
+) -> jax.Array:
+    """Charge-share accumulation: per-column popcount ``p`` in [0, N]."""
+    return jnp.sum(cell_outputs(a_bits, x_bits, mask, coding), axis=-2)
+
+
+def signed_dot_from_popcount(
+    p: jax.Array, n_unmasked: jax.Array, coding: Coding
+) -> jax.Array:
+    """Digital-domain recovery of the plane dot product from ``p``.
+
+    XNOR: each unmasked cell contributes +-1, so ``dot = 2p - n_unmasked``
+    (the controller's tally of masked rows provides the offset, paper Fig 6b).
+    AND:  cells contribute {0,1}, so ``dot = p`` directly.
+    """
+    coding = Coding(coding)
+    if coding == Coding.XNOR:
+        return 2.0 * p - n_unmasked
+    return p

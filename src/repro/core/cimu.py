@@ -1,0 +1,120 @@
+"""User-facing CIMU matmul: the paper's accelerator as a drop-in JAX op.
+
+Execution modes (``CimuConfig.mode``):
+
+* ``digital``      — plain float GEMM (the "not in-memory computing"
+                     baseline of the paper's comparison table).
+* ``digital_int``  — bit-true integer compute at (B_A, B_X): fake-quantize
+                     both operands and multiply exactly.  This is the
+                     paper's *ideal* reference (the "vs. ideal" accuracy
+                     column of Fig. 11).
+* ``cimu``         — faithful mixed-signal BP/BS pipeline: bit planes,
+                     per-bank charge-share popcounts, 8-b ADC, near-memory
+                     shift-add recombination (:mod:`repro.core.bpbs`).
+                     With ``use_kernel=True``, dispatches to the Pallas TPU
+                     kernel (:mod:`repro.kernels.cima_mvm`).
+
+Gradients: straight-through estimator (STE) — the backward pass is that of
+the plain float GEMM, which is what quantization-aware training of the
+paper's CIFAR networks uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bpbs import BpbsConfig, bpbs_matmul_int
+from .quant import Coding, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class CimuConfig:
+    """Static, hashable config attached to every CIMU-capable linear layer."""
+
+    mode: str = "digital"          # digital | digital_int | cimu
+    ba: int = 4
+    bx: int = 4
+    coding: Coding = Coding.XNOR
+    bank_n: int = 2304
+    adc_bits: int = 8
+    adc_sigma_lsb: float = 0.0
+    adaptive_range: bool = False
+    per_channel: bool = True       # per-output-column weight scales
+    use_kernel: bool = False       # Pallas cima_mvm kernel for the cimu mode
+    interpret: bool = True         # Pallas interpret mode (CPU container)
+
+    def __post_init__(self):
+        object.__setattr__(self, "coding", Coding(self.coding))
+        if self.mode not in ("digital", "digital_int", "cimu"):
+            raise ValueError(f"unknown CIMU mode {self.mode!r}")
+
+    def bpbs(self, ideal_adc: bool = False) -> BpbsConfig:
+        return BpbsConfig(
+            ba=self.ba,
+            bx=self.bx,
+            coding=self.coding,
+            bank_n=self.bank_n,
+            adc_bits=self.adc_bits,
+            adc_sigma_lsb=self.adc_sigma_lsb,
+            adaptive_range=self.adaptive_range,
+            ideal_adc=ideal_adc,
+        )
+
+
+def _cimu_forward(
+    x: jax.Array, w: jax.Array, cfg: CimuConfig, key: Optional[jax.Array]
+) -> jax.Array:
+    """Quantize -> BP/BS integer MVM -> rescale.  x: [..., N], w: [N, M]."""
+    from repro.distributed.autoshard import cs
+
+    qx = quantize(x, cfg.bx, cfg.coding)
+    # the paper's C_x discipline at TP scale: any cross-device regather of
+    # the activations happens on the quantized int8 values (B_X bits on the
+    # chip's DMA), not on f32 planes — 16x fewer bytes (§Perf cell c)
+    q_int = cs(qx.q.astype(jnp.int8), ("dp",))
+    qx = dataclasses.replace(qx, q=q_int)
+    qw = quantize(w, cfg.ba, cfg.coding, axis=1 if cfg.per_channel else None)
+    if cfg.mode == "digital_int":
+        y_int = jnp.einsum(
+            "...n,nm->...m", qx.q.astype(jnp.float32), qw.q.astype(jnp.float32)
+        )
+    elif cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        y_int = kernel_ops.cima_mvm(
+            qx.q, qw.q, cfg.bpbs(), interpret=cfg.interpret
+        )
+    else:
+        y_int = bpbs_matmul_int(qx.q, qw.q, cfg.bpbs(), key)
+    scale_w = qw.scale if not cfg.per_channel else qw.scale.reshape(1, -1)
+    return y_int * qx.scale * scale_w
+
+
+def cimu_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    cfg: CimuConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """``x @ w`` under the configured execution mode, with STE gradients."""
+    if cfg.mode == "digital":
+        return jnp.einsum("...n,nm->...m", x, w)
+
+    @jax.custom_vjp
+    def _op(x, w):
+        return _cimu_forward(x, w, cfg, key)
+
+    def _fwd(x, w):
+        return _op(x, w), (x, w)
+
+    def _bwd(res, g):
+        x, w = res
+        dx = jnp.einsum("...m,nm->...n", g, w)
+        dw = jnp.einsum("...n,...m->nm", x, g)
+        return dx, dw
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(x, w)

@@ -1,0 +1,61 @@
+"""Near-memory digital datapath: post-reduce compute (paper Fig. 5).
+
+After BP/BS recombination (the barrel shift + accumulate in
+:mod:`repro.core.bpbs`), the 8:1 column-multiplexed datapath applies the
+configurable post-reduce pipeline: global/local scaling and biasing,
+batch normalization, activation function, and saturation of the output to
+B_y bits (16 b when ``B_X + B_A <= 5``, else 32 b — paper Fig. 8).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def output_bits(bx: int, ba: int) -> int:
+    """B_y as set by the near-memory datapath (paper Fig. 8)."""
+    return 16 if (bx + ba) <= 5 else 32
+
+
+def saturate(y: jax.Array, bits: int) -> jax.Array:
+    hi = 2.0 ** (bits - 1) - 1
+    return jnp.clip(y, -(hi + 1), hi)
+
+
+ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "sign": lambda x: jnp.where(x >= 0, 1.0, -1.0),
+    "identity": lambda x: x,
+}
+
+
+def postreduce(
+    y: jax.Array,
+    scale: Optional[jax.Array] = None,   # per-column or scalar
+    bias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    by_bits: Optional[int] = None,
+) -> jax.Array:
+    """The datapath's post-reduce pipeline on recombined outputs."""
+    if by_bits is not None:
+        y = saturate(y, by_bits)
+    if scale is not None:
+        y = y * scale
+    if bias is not None:
+        y = y + bias
+    if act is not None:
+        y = ACTIVATIONS[act](y)
+    return y
+
+
+def fold_batchnorm(
+    gamma: jax.Array, beta: jax.Array, mean: jax.Array, var: jax.Array,
+    eps: float = 1e-5,
+) -> tuple[jax.Array, jax.Array]:
+    """Fold BN statistics into the datapath's (scale, bias) registers."""
+    inv = gamma * jax.lax.rsqrt(var + eps)
+    return inv, beta - mean * inv

@@ -1,0 +1,189 @@
+"""Bit-plane quantization codings for the BP/BS scheme (paper Fig. 4).
+
+Two codings are supported, exactly as in the paper:
+
+* ``AND``  — standard 2's-complement.  A ``B``-bit integer ``q`` in
+  ``[-2^(B-1), 2^(B-1)-1]`` is decomposed into ``B`` planes with bits in
+  ``{0,1}`` and plane weights ``[1, 2, ..., 2^(B-2), -2^(B-1)]``.  The
+  bit-cell operation between two planes is a logical AND (product of
+  ``{0,1}`` bits), so zero-valued elements contribute nothing to any plane
+  ("sparsity-proportional energy savings are inherently achieved").
+
+* ``XNOR`` — bits map to ``{-1,+1}``.  Representing zero requires two
+  planes with LSB weighting (paper §2), so a ``B``-bit element uses plane
+  weights ``[2^(B-2), ..., 2, 1, 1]`` (for ``B >= 2``; ``[1]`` for
+  ``B == 1``).  The representable grid is the even integers in
+  ``[-2^(B-1), 2^(B-1)]`` — i.e. ``2^(B-1)+1`` symmetric levels with the
+  factor of two absorbed into the scale.  The bit-cell operation is XNOR,
+  whose column popcount relates to the signed dot product by
+  ``dot = 2*p - n`` (n = number of unmasked rows).
+
+All plane tensors put the plane index in the LAST axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Coding(str, enum.Enum):
+    XNOR = "xnor"
+    AND = "and"
+
+
+def plane_weights(bits: int, coding: Coding) -> np.ndarray:
+    """Significance weight of each bit plane (float64 numpy, length ``bits``)."""
+    coding = Coding(coding)
+    if bits < 1:
+        raise ValueError(f"bits must be >= 1, got {bits}")
+    if coding == Coding.XNOR:
+        if bits == 1:
+            return np.array([1.0])
+        # [2^(B-2), ..., 2, 1, 1] — two LSB-weight planes to represent zero.
+        return np.array([2.0 ** k for k in range(bits - 2, -1, -1)] + [1.0])
+    else:
+        # 2's complement: [1, 2, ..., 2^(B-2), -2^(B-1)]  (B=1 -> unsigned {0,1})
+        if bits == 1:
+            return np.array([1.0])
+        return np.array([2.0 ** k for k in range(bits - 1)] + [-(2.0 ** (bits - 1))])
+
+
+def int_range(bits: int, coding: Coding) -> tuple[int, int]:
+    """Inclusive integer grid range representable by the coding."""
+    coding = Coding(coding)
+    if coding == Coding.XNOR:
+        if bits == 1:
+            return (-1, 1)
+        return (-(2 ** (bits - 1)), 2 ** (bits - 1))  # even integers only
+    else:
+        if bits == 1:
+            return (0, 1)
+        return (-(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+
+
+def n_levels(bits: int, coding: Coding) -> int:
+    coding = Coding(coding)
+    if coding == Coding.XNOR:
+        return 2 if bits == 1 else 2 ** (bits - 1) + 1
+    return 2 ** bits
+
+
+@dataclasses.dataclass
+class QTensor:
+    """A quantized tensor: ``value ~= q * scale`` with ``q`` on the coding grid."""
+
+    q: jax.Array          # integer-valued (stored float32 or int32)
+    scale: jax.Array      # scalar or broadcastable per-channel scale
+    bits: int
+    coding: Coding
+
+    @property
+    def dequant(self) -> jax.Array:
+        return self.q * self.scale
+
+
+def quantize(
+    x: jax.Array,
+    bits: int,
+    coding: Coding,
+    axis: Optional[int] = None,
+    eps: float = 1e-12,
+) -> QTensor:
+    """Symmetric (per-tensor or per-axis) quantization onto the coding grid."""
+    coding = Coding(coding)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    amax = jnp.maximum(amax, eps)
+
+    if coding == Coding.XNOR:
+        if bits == 1:
+            # BNN-style: q in {-1, +1}; scale = E|x| preserves magnitude.
+            if axis is None:
+                scale = jnp.mean(jnp.abs(x))
+            else:
+                reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+                scale = jnp.mean(jnp.abs(x), axis=reduce_axes, keepdims=True)
+            scale = jnp.maximum(scale, eps)
+            q = jnp.where(x >= 0, 1.0, -1.0)
+            return QTensor(q, scale, bits, coding)
+        half = 2.0 ** (bits - 2)          # max level index
+        scale = amax / (2.0 * half)       # q = 2 * level, level in [-half, half]
+        level = jnp.clip(jnp.round(x / (2.0 * scale)), -half, half)
+        return QTensor(2.0 * level, scale, bits, coding)
+    else:
+        if bits == 1:
+            scale = amax
+            q = jnp.clip(jnp.round(x / scale), 0, 1)
+            return QTensor(q, scale, bits, coding)
+        qmax = 2.0 ** (bits - 1) - 1
+        qmin = -(2.0 ** (bits - 1))
+        scale = amax / (2.0 ** (bits - 1))
+        q = jnp.clip(jnp.round(x / scale), qmin, qmax)
+        return QTensor(q, scale, bits, coding)
+
+
+def int_to_planes(q: jax.Array, bits: int, coding: Coding) -> jax.Array:
+    """Decompose integers on the coding grid into bit planes.
+
+    Returns planes with values in {0,1} (AND) or {-1,+1} (XNOR), shape
+    ``q.shape + (bits,)``, dtype float32 (exact small integers).
+    """
+    coding = Coding(coding)
+    q = q.astype(jnp.float32)
+    if coding == Coding.XNOR:
+        if bits == 1:
+            return jnp.where(q >= 0, 1.0, -1.0)[..., None]
+        big = 2.0 ** (bits - 1)
+        u = (q + big) / 2.0                       # in [0, 2^(B-1)], integer
+        e = jnp.where(u >= big, 1.0, 0.0)         # second LSB-weight plane
+        v = u - e * 1.0
+        v = jnp.where(u >= big, big - 1.0, v)     # u == big -> v = all-ones
+        e = jnp.where(u >= big, 1.0, e)
+        # v in [0, 2^(B-1)-1]: standard binary over weights [2^(B-2) .. 1]
+        planes = []
+        rem = v
+        for k in range(bits - 2, -1, -1):
+            w = 2.0 ** k
+            b = jnp.floor(rem / w)
+            rem = rem - b * w
+            planes.append(b)
+        planes.append(e)
+        bits01 = jnp.stack(planes, axis=-1)
+        return 2.0 * bits01 - 1.0                 # {0,1} -> {-1,+1}
+    else:
+        if bits == 1:
+            return jnp.clip(q, 0, 1)[..., None]
+        # two's complement: q + 2^(B-1) = unsigned B-bit value
+        u = q + 2.0 ** (bits - 1)
+        planes = []
+        rem = u
+        # weights [1, 2, ..., 2^(B-2), -2^(B-1)]; extract MSB-first from u
+        msb = jnp.floor(rem / (2.0 ** (bits - 1)))
+        # sign plane: q < 0 <-> u < 2^(B-1) <-> msb == 0 ... careful:
+        # u = q + 2^(B-1); q >= 0 -> u >= 2^(B-1) -> msb = 1. In 2's complement
+        # the sign bit is 1 for negatives: sign_bit = 1 - msb.
+        sign_bit = 1.0 - msb
+        rem = rem - msb * (2.0 ** (bits - 1))
+        low = []
+        for k in range(bits - 2, -1, -1):
+            w = 2.0 ** k
+            b = jnp.floor(rem / w)
+            rem = rem - b * w
+            low.append(b)
+        low.reverse()                             # now LSB-first: weights 1,2,...
+        planes = low + [sign_bit]
+        return jnp.stack(planes, axis=-1)
+
+
+def planes_to_int(planes: jax.Array, bits: int, coding: Coding) -> jax.Array:
+    """Inverse of :func:`int_to_planes` (weighted recombination)."""
+    w = jnp.asarray(plane_weights(bits, coding), dtype=jnp.float32)
+    return jnp.sum(planes * w, axis=-1)

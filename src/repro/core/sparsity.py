@@ -1,0 +1,42 @@
+"""Sparsity / AND-logic Controller (paper Fig. 6b).
+
+For every input vector the controller:
+
+* locates zero-valued elements and derives a mask bit ``M_n`` that gates
+  x_n / xb_n broadcasting over the CIMA (saving the ~50% of CIMA energy
+  attributable to broadcast + local compute, proportionally to sparsity);
+* tallies the masked rows, providing the digital offset needed under XNOR
+  coding to account for capacitors left in their reset state;
+* (AND mode) drives only the ``xb_n`` line so the bit cell computes a
+  logical AND instead of XNOR.
+
+Masking a zero element is *more* accurate than broadcasting its XNOR
+encoding: the encoded zero contributes +-1 to every plane which only
+cancels across planes — after per-plane ADC quantization the cancellation
+is imperfect, so masking also improves SQNR (paper §2), in addition to
+implicitly shrinking the column dynamic range.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def element_mask(x_q: jax.Array) -> jax.Array:
+    """Mask bit ``M_n`` per input element: 1 = broadcast, 0 = zero-valued."""
+    return jnp.where(x_q != 0, 1.0, 0.0)
+
+
+def unmasked_count(mask: jax.Array, axis: int = -1) -> jax.Array:
+    """Number of rows actually broadcast (per bank): ``N_active - tally``."""
+    return jnp.sum(mask, axis=axis)
+
+
+def masked_tally(mask: jax.Array, axis: int = -1) -> jax.Array:
+    """The controller's tally of masked rows (the XNOR reset-cap offset)."""
+    return mask.shape[axis] - unmasked_count(mask, axis)
+
+
+def sparsity_fraction(mask: jax.Array) -> jax.Array:
+    """Fraction of zero-valued elements (drives the energy model)."""
+    return 1.0 - jnp.mean(mask)

@@ -1,0 +1,110 @@
+"""SQNR analysis of the mixed-signal BP/BS compute (paper Fig. 7).
+
+The per-bank ADC resolves at most ``2^adc_bits`` of the column's ``N+1``
+levels, so for ``N > 255`` the computation deviates from bit-true integer
+compute.  Fig. 7 sweeps B_A for several B_X under XNOR and AND codings;
+we reproduce it empirically with uniformly-distributed operands (as in
+the paper's Fig. 10 multi-bit measurement).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bpbs import BpbsConfig, bpbs_matmul_int
+from .quant import Coding, int_range, quantize
+
+
+def sqnr_db(y_ref: jax.Array, y_hat: jax.Array) -> jax.Array:
+    """10 log10( signal power / quantization-noise power )."""
+    sig = jnp.mean(jnp.square(y_ref))
+    err = jnp.mean(jnp.square(y_ref - y_hat))
+    return 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-30))
+
+
+def random_operands(
+    key: jax.Array,
+    batch: int,
+    n: int,
+    m: int,
+    ba: int,
+    bx: int,
+    coding: Coding,
+    sparsity: float = 0.0,
+):
+    """Uniformly-distributed integer operands on the coding grids."""
+    kx, kw, ks = jax.random.split(key, 3)
+    lo_x, hi_x = int_range(bx, coding)
+    lo_w, hi_w = int_range(ba, coding)
+    if Coding(coding) == Coding.XNOR and bx > 1:
+        x = 2 * jax.random.randint(kx, (batch, n), lo_x // 2, hi_x // 2 + 1)
+    else:
+        x = jax.random.randint(kx, (batch, n), lo_x, hi_x + 1)
+    if Coding(coding) == Coding.XNOR and ba > 1:
+        w = 2 * jax.random.randint(kw, (n, m), lo_w // 2, hi_w // 2 + 1)
+    else:
+        w = jax.random.randint(kw, (n, m), lo_w, hi_w + 1)
+    if Coding(coding) == Coding.XNOR and bx == 1:
+        x = jnp.where(x == 0, 1, x)   # 1-b XNOR has no zero
+    if Coding(coding) == Coding.XNOR and ba == 1:
+        w = jnp.where(w == 0, 1, w)
+    if sparsity > 0:
+        keep = jax.random.bernoulli(ks, 1.0 - sparsity, (batch, n))
+        x = x * keep
+    return x.astype(jnp.float32), w.astype(jnp.float32)
+
+
+def measure_sqnr(
+    key: jax.Array,
+    n: int,
+    ba: int,
+    bx: int,
+    coding: Coding,
+    batch: int = 64,
+    m: int = 64,
+    sparsity: float = 0.0,
+    adc_bits: int = 8,
+    adaptive_range: bool = False,
+) -> float:
+    """Empirical SQNR (dB) of BP/BS+ADC compute vs bit-true integer compute."""
+    x, w = random_operands(key, batch, n, m, ba, bx, coding, sparsity)
+    cfg = BpbsConfig(
+        ba=ba, bx=bx, coding=coding, adc_bits=adc_bits,
+        adaptive_range=adaptive_range,
+    )
+    y_hat = bpbs_matmul_int(x, w, cfg)
+    y_ref = x @ w
+    return float(sqnr_db(y_ref, y_hat))
+
+
+@dataclasses.dataclass
+class SqnrPoint:
+    coding: str
+    n: int
+    ba: int
+    bx: int
+    sparsity: float
+    sqnr_db: float
+
+
+def sweep_fig7(
+    key: jax.Array,
+    n_values=(255, 2304),
+    ba_values=(1, 2, 3, 4, 5, 6),
+    bx_values=(1, 2, 4),
+    codings=(Coding.XNOR, Coding.AND),
+    sparsity: float = 0.0,
+) -> list[SqnrPoint]:
+    """The Fig. 7 sweep."""
+    out = []
+    for coding in codings:
+        for n in n_values:
+            for bx in bx_values:
+                for ba in ba_values:
+                    key, sub = jax.random.split(key)
+                    s = measure_sqnr(sub, n, ba, bx, coding, sparsity=sparsity)
+                    out.append(SqnrPoint(Coding(coding).value, n, ba, bx, sparsity, s))
+    return out

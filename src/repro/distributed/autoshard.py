@@ -1,0 +1,92 @@
+"""Activation sharding constraints with logical axis names.
+
+Model code calls ``cs(x, cands)`` at sharding-critical points (attention
+heads, scan carries, MoE dispatch buffers).  Each dim's candidate list is
+resolved against the ambient mesh with the same divisibility rules as the
+parameter shardings — on a CPU test run (no mesh set) every call is a
+no-op, so the model code stays mesh-agnostic.
+
+Logical axes:
+  "dp" -> the data-parallel axes (("pod","data") on the multi-pod mesh)
+  "tp" -> "model"
+  "fsdp" -> "data"
+
+Without these constraints XLA loses the head/expert sharding through
+``lax.scan`` carries (carries default to replicated), silently replicating
+attention across the model axis — a 16x compute blowup first caught by the
+loop-aware HLO accounting (EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]):
+    _STATE.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(prev)
+
+
+def _resolve(name, mesh):
+    from .sharding import get_policy
+
+    if name == "dp":
+        if get_policy() == "fsdp":
+            return tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if name == "tp":
+        return () if get_policy() == "fsdp" else ("model",)
+    if name == "fsdp":
+        return ("data",)
+    return (name,)
+
+
+def cs(x: jax.Array, cands: Sequence) -> jax.Array:
+    """Constrain ``x``'s sharding.  ``cands``: per-dim logical-axis
+    candidate (str), list of candidates, or None.  First divisible & unused
+    candidate wins; everything else replicates."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    used: set = set()
+    spec = []
+    for dim, cand in zip(x.shape, list(cands) + [None] * (x.ndim - len(cands))):
+        options = [] if cand is None else (
+            [cand] if isinstance(cand, str) else list(cand))
+        chosen = None
+        for name in options:
+            axes = _resolve(name, mesh)
+            if not axes:
+                continue
+            if any(a in used or a not in mesh.axis_names for a in axes):
+                continue
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                chosen = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+                break
+        spec.append(chosen)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+* :mod:`repro.kernels.cima_mvm` — the paper's accelerator: BP/BS bit-plane
+  GEMM with per-bank ADC quantization and fused near-memory epilogue.
+* :mod:`repro.kernels.flash_attention` — online-softmax attention for the
+  32k prefill shapes (causal, GQA, sliding window).
+
+``ops.py`` holds the jitted wrappers (interpret-mode on CPU); ``ref.py``
+the pure-jnp oracles every kernel is validated against.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,200 @@
+"""Pallas TPU kernel: the CIMU's BP/BS mixed-signal MVM (paper Figs. 2-5).
+
+TPU-native mapping of the chip's dataflow (see DESIGN.md §2):
+
+* The 2304-row CIMA *bank* is the reduction tile — it is both the chip's
+  charge-share/ADC boundary and (conveniently) a VMEM-sized, 128-aligned
+  MXU tile (2304 = 18 * 128).  One full bank of weight bit planes at a
+  256-column tile is ~590 KB of int8 — literally the chip's array size —
+  and fits VMEM with room for double buffering.
+* B_A weight bit planes are laid out in parallel in the last (lane)
+  dimension, as the chip lays bit-columns side by side; B_X input planes
+  stream through an in-kernel serial loop, as the chip streams input bits.
+* Each (kx, ka) plane pair is one MXU matmul over the bank — the
+  mixed-signal column evaluation — followed by the ADC transfer (clip +
+  round to 256 codes over the bank's full scale) on the VPU.
+* The near-memory digital datapath is the fused epilogue: barrel-shift
+  (plane-weight scaling) and accumulation over kx, ka, and banks, without
+  any HBM round-trip between reduce and post-ops.
+
+Grid: ``(batch_tiles, column_tiles, banks)`` with the bank dimension
+innermost ("arbitrary" semantics) so output tiles accumulate in place.
+
+Inputs are int8 bit planes (HBM traffic = 1 byte/plane-element); they are
+cast to bf16 in-kernel for the MXU (values are exactly representable; f32
+accumulation of <=2304 unit products is exact).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core.bpbs import BpbsConfig
+from repro.core.quant import Coding
+
+
+def _kernel(
+    xs_ref,     # [bb, BX, bank_n] int8: masked input bit planes
+    ws_ref,     # [bank_n, BA, bm] int8: weight bit planes (bit-parallel)
+    nu_ref,     # [bb, 1] f32: unmasked-row count for this bank
+    fs_ref,     # [1, 1]  f32: ADC full scale for this bank (static gating)
+    out_ref,    # [bb, bm] f32: recombined integer-grid output
+    *,
+    cfg: BpbsConfig,
+    wx: tuple,
+    wa: tuple,
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nu = nu_ref[...]                                  # [bb, 1]
+    if cfg.adaptive_range:
+        fs = jnp.maximum(nu, 1.0)                     # sparsity-controlled range
+    else:
+        fs = jnp.maximum(fs_ref[0, 0], 1.0)
+    cmax = float(2 ** cfg.adc_bits - 1)
+
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
+    for kx in range(cfg.bx):
+        x = xs_ref[:, kx, :].astype(jnp.bfloat16)     # [bb, bank_n]
+        for ka in range(cfg.ba):
+            w = ws_ref[:, ka, :].astype(jnp.bfloat16)  # [bank_n, bm]
+            # mixed-signal column evaluation: one MXU pass per plane pair
+            d = jax.lax.dot_general(
+                x, w, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            if cfg.coding == Coding.XNOR:
+                p = (d + nu) * 0.5                    # popcount from GEMM identity
+            else:
+                p = d
+            if not cfg.ideal_adc:
+                # 8-b SAR ADC: clip + round to codes, reconstruct
+                code = jnp.clip(jnp.round(jnp.clip(p, 0.0, fs) * (cmax / fs)),
+                                0.0, cmax)
+                p = jnp.round(code * (fs / cmax))
+            if cfg.coding == Coding.XNOR:
+                d_hat = 2.0 * p - nu
+            else:
+                d_hat = p
+            # near-memory datapath: barrel shift + accumulate (time & space)
+            acc = acc + (wx[kx] * wa[ka]) * d_hat
+    out_ref[...] += acc
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "block_b", "block_m", "interpret"),
+)
+def cima_mvm_planes(
+    xs: jax.Array,          # [B, BX, N] int8 masked input planes
+    ws: jax.Array,          # [N, BA, M] int8 weight planes
+    nu: jax.Array,          # [B, n_banks] f32 unmasked rows per bank
+    fs: jax.Array,          # [n_banks] f32 ADC full scale per bank
+    cfg: BpbsConfig,
+    block_b: int = 128,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Raw kernel entry on pre-decomposed planes.  Returns [B, M] f32."""
+    b, bx, n = xs.shape
+    n_w, ba, m = ws.shape
+    assert n_w == n and bx == cfg.bx and ba == cfg.ba
+    n_banks = -(-n // cfg.bank_n)
+
+    xs = _pad_to(_pad_to(xs, 0, block_b), 2, cfg.bank_n)
+    ws = _pad_to(_pad_to(ws, 0, cfg.bank_n), 2, block_m)
+    nu = _pad_to(nu, 0, block_b)
+    bp, mp = xs.shape[0], ws.shape[2]
+
+    grid = (bp // block_b, mp // block_m, n_banks)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            cfg=cfg,
+            wx=tuple(float(v) for v in cfg.wx),
+            wa=tuple(float(v) for v in cfg.wa),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, cfg.bx, cfg.bank_n), lambda i, j, k: (i, 0, k)),
+            pl.BlockSpec((cfg.bank_n, cfg.ba, block_m), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, k)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_m), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="cima_bpbs_mvm",
+    )(xs, ws, nu, fs.reshape(1, -1))
+    return out[:b, :m]
+
+
+def prepare_inputs(x_q: jax.Array, cfg: BpbsConfig):
+    """Input bit planes + per-bank unmasked counts (the w2b Reshaping Buffer
+    and Sparsity Controller roles, in XLA)."""
+    from repro.core.bpbs import input_planes
+
+    lead = x_q.shape[:-1]
+    n = x_q.shape[-1]
+    x2 = x_q.reshape(-1, n)
+    planes, mask = input_planes(x2, cfg)           # [B, N, BX], [B, N]
+    xs = jnp.transpose(planes, (0, 2, 1)).astype(jnp.int8)
+    n_banks = -(-n // cfg.bank_n)
+    pad = n_banks * cfg.bank_n - n
+    mask_p = jnp.pad(mask, ((0, 0), (0, pad)))
+    nu = mask_p.reshape(-1, n_banks, cfg.bank_n).sum(-1).astype(jnp.float32)
+    return xs, nu, lead
+
+
+def prepare_weights(w_q: jax.Array, cfg: BpbsConfig):
+    """Weight bit planes [N, BA, M] (precomputable: weights are stationary
+    in the CIMA — reloading costs ~18k cycles on-chip, paper Fig. 8)."""
+    from repro.core.bpbs import weight_planes
+
+    wp = weight_planes(w_q, cfg)                   # [N, M, BA]
+    ws = jnp.transpose(wp, (0, 2, 1)).astype(jnp.int8)
+    n = w_q.shape[0]
+    n_banks = -(-n // cfg.bank_n)
+    sizes = np.minimum(
+        np.full(n_banks, cfg.bank_n), n - np.arange(n_banks) * cfg.bank_n
+    )
+    fs = jnp.asarray(sizes, dtype=jnp.float32)
+    return ws, fs
+
+
+def cima_mvm(
+    x_q: jax.Array,
+    w_q: jax.Array,
+    cfg: BpbsConfig,
+    block_b: int = 128,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """BP/BS MVM on integer-grid operands: [..., N] x [N, M] -> [..., M]."""
+    xs, nu, lead = prepare_inputs(x_q, cfg)
+    ws, fs = prepare_weights(w_q, cfg)
+    y = cima_mvm_planes(xs, ws, nu, fs, cfg, block_b, block_m, interpret)
+    return y.reshape(*lead, w_q.shape[1])

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bpbs import BpbsConfig, bpbs_matmul_int
+
+
+def cima_mvm_ref(x_q: jax.Array, w_q: jax.Array, cfg: BpbsConfig) -> jax.Array:
+    """Oracle for kernels.cima_mvm: the core BP/BS reference pipeline."""
+    return bpbs_matmul_int(x_q, w_q, cfg)
+
+
+def attention_ref(
+    q: jax.Array,                 # [B, H, Sq, D]
+    k: jax.Array,                 # [B, HKV, Sk, D]
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for kernels.flash_attention: dense masked softmax attention."""
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = jnp.arange(sq)[:, None] + (sk - sq)   # align last query to last key
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, without allocating a single parameter.
+
+For each cell this records to ``artifacts/dryrun/<cell>.json``:
+  * per-device HLO FLOPs / bytes (``compiled.cost_analysis()``),
+  * per-device collective transfer bytes by op kind (parsed from the
+    post-SPMD optimized HLO),
+  * exact per-device argument bytes (params/opt-state/cache from the
+    shardings), plus XLA ``memory_analysis`` when the backend provides it,
+  * compile wall time.
+
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system; the roofline analysis (repro.roofline) consumes
+these artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(token_dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES[token_dtype]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device transfer bytes by collective kind.  For each collective
+    instruction we take the LARGEST shape on the line (covers all-gather
+    outputs and all-reduce operands) as the transfer proxy."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.search(r"=\s*\(?[a-z0-9\[\],{}\s]*\)?\s*(%?)([a-z\-]+)", ls)
+        for op in COLLECTIVE_OPS:
+            if re.search(rf"\b{op}(-start|-done)?\(", ls) or \
+               re.search(rf"=\s*\S*\s*{op}(-start)?\b", ls):
+                sizes = [_shape_bytes(t, d) for t, d in _SHAPE_RE.findall(ls)]
+                if sizes:
+                    out[op]["count"] += 1
+                    out[op]["bytes"] += max(sizes)
+                break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _sharded_bytes(struct, sharding) -> int:
+    import numpy as np
+
+    total = struct.size * struct.dtype.itemsize
+    spec = sharding.spec
+    denom = 1
+    mesh = sharding.mesh
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        for a in axes:
+            denom *= mesh.shape[a]
+    return total // denom
+
+
+def tree_arg_bytes(structs, shardings) -> int:
+    import jax
+
+    leaves_s = jax.tree_util.tree_leaves(structs)
+    leaves_h = jax.tree_util.tree_leaves(shardings)
+    return sum(_sharded_bytes(s, h) for s, h in zip(leaves_s, leaves_h))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             cimu_mode: str = "digital", out_dir: str = "artifacts/dryrun",
+             extra_tag: str = "", opts: str = "") -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.shapes import SHAPES, TRAIN_MICROBATCHES, cell_supported
+    from repro.models import decode_step, init_cache, init_params, prefill
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.state import init_train_state
+    from repro.train.step import build_train_step
+
+    shape = SHAPES[shape_name]
+    mesh_tag = "pod2" if multi_pod else "pod1"
+    tag = f"{arch}__{shape_name}__{mesh_tag}" + \
+        (f"__{extra_tag}" if extra_tag else "")
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+              "cimu_mode": cimu_mode, "tag": extra_tag}
+
+    cfg = get_config(arch)
+    if cimu_mode != "digital":
+        cfg = cfg.with_cimu(mode=cimu_mode)
+    # §Perf hillclimb knobs: "--opt attn_scan_remat=1,onehot_embed=1,mb=4"
+    mb_override = None
+    if opts:
+        import dataclasses
+
+        kw = {}
+        for kv in opts.split(","):
+            k, v = kv.split("=")
+            if k == "mb":
+                mb_override = int(v)
+            elif k in ("attn_scan_remat", "onehot_embed", "attn_bf16_probs", "sp_residual"):
+                kw[k] = bool(int(v))
+            elif k == "policy":
+                from repro.distributed.sharding import set_policy
+                set_policy(v)
+            else:
+                raise ValueError(f"unknown opt {k}")
+        if kw:
+            cfg = dataclasses.replace(cfg, **kw)
+        record["opts"] = opts
+    ok, reason = cell_supported(cfg, shape_name)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        return _write(record, tag, out_dir)
+
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.distributed import autoshard
+    autoshard.set_mesh(mesh)
+    key = jax.random.PRNGKey(0)
+    max_seq = shape.seq if shape.kind != "train" else 4096
+
+    params_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, max_seq=max_seq), key)
+    param_sh = shd.param_specs(params_shapes, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            state_shapes = jax.eval_shape(
+                lambda k: init_train_state(
+                    init_params(cfg, k, max_seq=max_seq)), key)
+            state_sh = shd.state_specs(state_shapes, mesh)
+            batch_shapes = {"tokens": jax.ShapeDtypeStruct(
+                (shape.batch, shape.seq), jnp.int32)}
+            if cfg.frontend != "none":
+                batch_shapes["frontend_embeds"] = jax.ShapeDtypeStruct(
+                    (shape.batch, cfg.frontend_seq, cfg.d_model), jnp.float32)
+            batch_sh = shd.batch_specs(batch_shapes, mesh, shape.batch)
+            mb = mb_override or TRAIN_MICROBATCHES.get(arch, 1)
+            step = build_train_step(cfg, AdamWConfig(), microbatches=mb)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=0)
+            lowered = jitted.lower(shd.with_sharding(state_shapes, state_sh),
+                                   shd.with_sharding(batch_shapes, batch_sh))
+            arg_bytes = tree_arg_bytes(state_shapes, state_sh) + \
+                tree_arg_bytes(batch_shapes, batch_sh)
+            record["microbatches"] = mb
+
+        elif shape.kind == "prefill":
+            tok = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
+            tok_sh = shd.batch_specs(tok, mesh, shape.batch)
+            fe = fe_sh = None
+            if cfg.frontend != "none":
+                fe = jax.ShapeDtypeStruct(
+                    (shape.batch, cfg.frontend_seq, cfg.d_model), jnp.float32)
+                fe_sh = shd.batch_specs(fe, mesh, shape.batch)
+
+            def fn(params, tokens, fe):
+                return prefill(params, tokens, cfg, shape.seq, fe)
+
+            jitted = jax.jit(fn, in_shardings=(param_sh, tok_sh, fe_sh))
+            lowered = jitted.lower(
+                shd.with_sharding(params_shapes, param_sh),
+                shd.with_sharding(tok, tok_sh),
+                None if fe is None else shd.with_sharding(fe, fe_sh))
+            arg_bytes = tree_arg_bytes(params_shapes, param_sh) + \
+                tree_arg_bytes(tok, tok_sh)
+
+        else:  # decode
+            cache_shapes = jax.eval_shape(
+                lambda: init_cache(cfg, shape.batch, shape.seq))
+            # whisper: cross_kv is produced by prefill; give it the encoder
+            # shape explicitly for the decode-step signature
+            if cfg.is_encdec:
+                kv = jax.ShapeDtypeStruct(
+                    (cfg.n_layers, shape.batch, cfg.frontend_seq,
+                     cfg.n_kv_heads, cfg.hd),
+                    jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+                cache_shapes = cache_shapes._replace(cross_kv=(kv, kv))
+            cache_sh = shd.cache_specs(cache_shapes, mesh, shape.batch)
+            tok = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
+            tok_sh = shd.batch_specs(tok, mesh, shape.batch)
+
+            def fn(params, token, cache):
+                return decode_step(params, token, cache, cfg)
+
+            jitted = jax.jit(fn, in_shardings=(param_sh, tok_sh, cache_sh),
+                             out_shardings=None, donate_argnums=2)
+            lowered = jitted.lower(
+                shd.with_sharding(params_shapes, param_sh),
+                shd.with_sharding(tok, tok_sh),
+                shd.with_sharding(cache_shapes, cache_sh))
+            arg_bytes = tree_arg_bytes(params_shapes, param_sh) + \
+                tree_arg_bytes(cache_shapes, cache_sh)
+
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" in k)}
+    except Exception as e:  # noqa: BLE001
+        cost = {"error": str(e)}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            if hasattr(ma, attr):
+                mem[attr] = int(getattr(ma, attr))
+    except Exception as e:  # noqa: BLE001
+        mem = {"error": str(e)}
+
+    text = compiled.as_text()
+    # archive the partitioned HLO so the roofline can be re-derived without
+    # recompiling
+    import gzip
+    os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+    with gzip.open(os.path.join(out_dir, "hlo", f"{tag}.hlo.gz"), "wt") as f:
+        f.write(text)
+    from repro.roofline.hlo_stats import analyze as hlo_analyze
+    loop_aware = hlo_analyze(text)
+    record.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        cost_analysis=cost,
+        memory_analysis=mem,
+        collectives=parse_collectives(text),         # raw (loop-unaware)
+        hlo_stats=loop_aware,                        # loop-aware accounting
+        arg_bytes_per_device=int(arg_bytes),
+        n_devices=int(mesh.devices.size),
+        hlo_instructions=text.count("\n"),
+    )
+    return _write(record, tag, out_dir)
+
+
+def _write(record: dict, tag: str, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{tag}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    status = record["status"]
+    extra = ""
+    if status == "ok":
+        fl = record["hlo_stats"]["dot_flops"]
+        cb = record["hlo_stats"]["collective_bytes"]
+        extra = (f" dot_flops/dev={fl:.3g} coll_bytes/dev={cb:.3g} "
+                 f"args/dev={record['arg_bytes_per_device']/2**30:.2f}GiB "
+                 f"compile={record['compile_s']}s")
+    print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", default="no", choices=["no", "yes", "both"])
+    ap.add_argument("--cimu", default="digital")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opt", default="",
+                    help="perf knobs, e.g. attn_scan_remat=1,mb=4")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.launch.shapes import all_cells
+        failures = []
+        for arch, shape_name, ok, reason in all_cells():
+            pods = ["no", "yes"] if args.multi_pod == "both" else \
+                [args.multi_pod]
+            for mp in pods:
+                mesh_tag = "pod2" if mp == "yes" else "pod1"
+                out_json = os.path.join(
+                    args.out, f"{arch}__{shape_name}__{mesh_tag}.json")
+                if os.path.exists(out_json):
+                    print(f"[dryrun] cached: {out_json}", flush=True)
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--multi-pod", mp, "--cimu", args.cimu,
+                       "--out", args.out]
+                r = subprocess.run(cmd)
+                if r.returncode != 0:
+                    failures.append((arch, shape_name, mp))
+        if failures:
+            print(f"[dryrun] FAILURES: {failures}", flush=True)
+            sys.exit(1)
+        print("[dryrun] all cells done", flush=True)
+        return
+
+    try:
+        run_cell(args.arch, args.shape, args.multi_pod == "yes",
+                 args.cimu, args.out, args.tag, args.opt)
+    except Exception:
+        traceback.print_exc()
+        mesh_tag = "pod2" if args.multi_pod == "yes" else "pod1"
+        tag = f"{args.arch}__{args.shape}__{mesh_tag}" + \
+            (f"__{args.tag}" if args.tag else "")
+        _write({"arch": args.arch, "shape": args.shape, "mesh": mesh_tag,
+                "status": "error", "tag": args.tag,
+                "error": traceback.format_exc()[-2000:]}, tag, args.out)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips (data x model).  Multi-pod: 2 pods x
+256 = 512 chips with a leading "pod" axis (pure DP across the slower
+inter-pod links).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

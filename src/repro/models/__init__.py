@@ -1,0 +1,7 @@
+"""Model zoo: composable layers + the unified LM API over all assigned
+architectures (see repro.configs)."""
+from .model import (DecodeCache, decode_step, forward, init_cache,
+                    init_params, loss_fn, prefill)
+
+__all__ = ["DecodeCache", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,380 @@
+"""Attention: GQA/MHA, MLA (deepseek), sliding-window local attention,
+with a memory-efficient chunked (online-softmax) path for long sequences
+and KV-cache prefill/decode.
+
+Weights stay 2-D ``[d_in, heads*head_dim]`` so the divisibility-aware
+sharding rules apply uniformly across all assigned archs (whisper's 6
+heads, llama4's 40 heads: the fused dim is divisible by the model axis
+even when the head count is not).
+
+CIMU note (DESIGN.md §2): only the static-weight projections (q/k/v/o,
+MLA down/up) are CIMU-eligible; the score/value matmuls have two dynamic
+operands and stay digital, as on the chip (weights are stationary in the
+CIMA; reloading costs ~18k cycles).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.autoshard import cs, get_mesh
+
+from .layers import apply_rope, init_linear, linear
+
+DEFAULT_CHUNK = 512
+
+
+def _attn_tp_mode(kv: int, g: int, sq: int, d: int) -> str:
+    """Where the TP axis goes inside attention, by divisibility priority:
+    kv heads > GQA group (MQA) > query sequence (SP — always divisible for
+    the assigned shapes) > head_dim.  Without this, archs whose head counts
+    don't divide the model axis (llama3.2 kv=8/g=4/d=64 on a 16-way axis)
+    fall back to replicated activations against sharded weights and XLA
+    emits a full score all-reduce PER CHUNK STEP — 550 GB/device on
+    llama3.2 train_4k (EXPERIMENTS.md §Perf iteration 1)."""
+    from repro.distributed.sharding import get_policy
+
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names \
+            or get_policy() == "fsdp":
+        return "none"
+    m = mesh.shape["model"]
+    if m <= 1:
+        return "none"
+    if kv % m == 0:
+        return "kv"
+    if g % m == 0:
+        return "g"
+    if sq % m == 0:
+        return "sq"
+    if d % m == 0:
+        return "d"
+    return "none"
+
+
+def _qg_spec(mode):
+    # qg dims: [b, sq, kv, g, d]
+    return {"kv": ("dp", None, "tp", None, None),
+            "g": ("dp", None, None, "tp", None),
+            "sq": ("dp", "tp", None, None, None),
+            "d": ("dp", None, None, None, "tp"),
+            "none": ("dp",)}[mode]
+
+
+def _carry_spec(mode, with_d=False):
+    # carries: [b, kv, g, sq] (+ [d] for the accumulator)
+    base = {"kv": ("dp", "tp", None, None),
+            "g": ("dp", None, "tp", None),
+            "sq": ("dp", None, None, "tp"),
+            "d": ("dp", None, None, None),
+            "none": ("dp",)}[mode]
+    if with_d:
+        base = base + (("tp",) if mode == "d" else (None,))
+    return base
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, S_max, HKV, D]
+    v: jax.Array
+
+
+def _dense_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
+                     kv_positions=None):
+    """q: [B,Sq,H,D]; k,v: [B,Sk,KV,D].  Grouped-GQA dense softmax.
+    ``kv_positions`` gives the absolute position of each KV slot (ring
+    caches); negative positions mark unwritten slots."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    mode = _attn_tp_mode(kv, g, sq, d)
+    qg = cs(q.reshape(b, sq, kv, g, d), _qg_spec(mode))
+    kv_spec = {"kv": ("dp", None, "tp", None), "d": ("dp", None, None, "tp")
+               }.get(mode, ("dp",))
+    k = cs(k, kv_spec)
+    v = cs(v, kv_spec)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qi = (jnp.arange(sq) + q_offset)[:, None]
+    kj = (jnp.arange(sk) if kv_positions is None else kv_positions)[None, :]
+    mask = kj >= 0
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= kj > qi - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, v.shape[-1]).astype(dtype)  # dv may differ (MLA)
+
+
+def _chunked_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
+                       chunk=DEFAULT_CHUNK, kv_positions=None,
+                       scan_remat=False, bf16_probs=False):
+    """Online-softmax over KV chunks (lax.scan): never materializes the
+    full score matrix — the pure-XLA counterpart of the Pallas kernel."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    if kv_positions is None:
+        kv_positions = jnp.arange(sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+    n_chunks = k.shape[1] // chunk
+    mode = _attn_tp_mode(kv, g, sq, d)
+    kv_spec = {"kv": (None, "dp", None, "tp", None),
+               "d": (None, "dp", None, None, "tp")}.get(mode, (None, "dp"))
+    kc = k.reshape(b, n_chunks, chunk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    kc = cs(kc, kv_spec)
+    vc = cs(vc, kv_spec)
+    pc = kv_positions.reshape(n_chunks, chunk)
+    qg = cs(q.reshape(b, sq, kv, g, d).astype(jnp.float32), _qg_spec(mode))
+    qi = (jnp.arange(sq) + q_offset)[:, None]
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, kch, vch = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kch.astype(jnp.float32)) * scale
+        kj = kj[None, :]
+        mask = kj >= 0                       # hide padding / unwritten slots
+        if causal:
+            mask = mask & (qi >= kj)
+        if window is not None:
+            mask = mask & (kj > qi - window)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        if bf16_probs:
+            # flash-attention practice: probs in bf16 into the PV matmul
+            # (halves the dominant HBM stream; l stays f32 so the final
+            # normalization is exact)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(jnp.bfloat16),
+                            vch.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vch.astype(jnp.float32))
+        acc = alpha[..., None] * acc + pv
+        return (m_new, l, acc), None
+
+    dv = v.shape[-1]                     # may differ from q's dim (MLA)
+    # constrain the carries: scan carries default to replicated, which would
+    # silently drop the head/seq sharding and replicate attention across TP
+    m0 = cs(jnp.full((b, kv, g, sq), -1e30, jnp.float32), _carry_spec(mode))
+    l0 = cs(jnp.zeros((b, kv, g, sq), jnp.float32), _carry_spec(mode))
+    a0 = cs(jnp.zeros((b, kv, g, sq, dv), jnp.float32),
+            _carry_spec(mode, with_d=True))
+    if scan_remat:
+        # §Perf knob: recompute scores/probabilities in the backward pass
+        # instead of saving per-chunk residuals (flash-attention-style bwd)
+        step = jax.checkpoint(step, prevent_cse=False)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (pc, kc, vc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv).astype(dtype)
+
+
+def sdpa(q, k, v, *, causal=True, window=None, q_offset=0,
+         scale=None, dtype=jnp.bfloat16, chunk=DEFAULT_CHUNK,
+         kv_positions=None, scan_remat=False, bf16_probs=False):
+    """Dispatch dense vs chunked by KV length."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    if k.shape[1] <= 2 * chunk:
+        return _dense_attention(q, k, v, causal=causal, window=window,
+                                q_offset=q_offset, scale=scale, dtype=dtype,
+                                kv_positions=kv_positions)
+    return _chunked_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, scale=scale, dtype=dtype,
+                              chunk=chunk, kv_positions=kv_positions,
+                              scan_remat=scan_remat, bf16_probs=bf16_probs)
+
+
+def ring_slot_positions(cache_len: int, cache_pos) -> jax.Array:
+    """Absolute position held by each ring-cache slot after writing at
+    ``cache_pos``: slot i holds the largest p <= cache_pos with p % L == i
+    (negative = not yet written)."""
+    i = jnp.arange(cache_len)
+    return cache_pos - jnp.mod(cache_pos - i, cache_len)
+
+
+# ------------------------------------------------------------------ GQA
+
+def init_attention(key, cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(k1, d, h * hd),
+        "wk": init_linear(k2, d, kv * hd),
+        "wv": init_linear(k3, d, kv * hd),
+        "wo": init_linear(k4, h * hd, d),
+    }
+
+
+def init_kv_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> KVCache:
+    """Windowed layers get a ring cache of the window length — bounded
+    state is what makes the hybrid archs long_500k-eligible."""
+    length = min(s_max, cfg.attn_window) if cfg.attn_window else s_max
+    shape = (batch, length, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention(params, x, cfg, positions, cache: Optional[KVCache] = None,
+              cache_pos=None, dtype=jnp.bfloat16):
+    """Full-seq (train/prefill) when cache_pos is None; else single-step
+    decode updating ``cache`` at ``cache_pos``.  Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    q = cs(linear(params["wq"], x, cimu, dtype).reshape(b, s, h, hd),
+           ("dp", None, ["tp"], ["tp"]))
+    k = cs(linear(params["wk"], x, cimu, dtype).reshape(b, s, kv, hd),
+           ("dp", None, ["tp"], ["tp"]))
+    v = cs(linear(params["wv"], x, cimu, dtype).reshape(b, s, kv, hd),
+           ("dp", None, ["tp"], ["tp"]))
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache_pos is None:
+        o = sdpa(q, k, v, causal=cfg.causal, window=cfg.attn_window,
+                 q_offset=0, dtype=dtype, scan_remat=cfg.attn_scan_remat,
+                 bf16_probs=cfg.attn_bf16_probs)
+        new_cache = None
+        if cache is not None:   # prefill: fill the (possibly ring) cache
+            length = cache.k.shape[1]
+            if length >= s:
+                ck = jax.lax.dynamic_update_slice(
+                    cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+            else:               # keep only the trailing window, ring-aligned
+                off = (s - length) % length
+                ck = jnp.roll(k[:, s - length:].astype(cache.k.dtype),
+                              off, axis=1)
+                cv = jnp.roll(v[:, s - length:].astype(cache.v.dtype),
+                              off, axis=1)
+            new_cache = KVCache(ck, cv)
+    else:
+        length = cache.k.shape[1]
+        slot = jnp.mod(cache_pos, length)
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        new_cache = KVCache(ck, cv)
+        kv_pos = ring_slot_positions(length, cache_pos)
+        o = sdpa(q, ck, cv, causal=True, window=cfg.attn_window,
+                 q_offset=cache_pos, dtype=dtype, kv_positions=kv_pos)
+    out = linear(params["wo"], o.reshape(b, s, h * hd), cimu, dtype)
+    return out, new_cache
+
+
+# ------------------------------------------------------------------ MLA
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # [B, S_max, kv_lora]  compressed latents
+    k_rope: jax.Array     # [B, S_max, rope_dim] shared rope key
+
+
+def init_mla_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+        jnp.zeros((batch, s_max, cfg.qk_rope_head_dim), dtype),
+    )
+
+
+def init_mla(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_head_dim,
+                     cfg.qk_rope_head_dim, cfg.v_head_dim)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        "wq": init_linear(k1, d, h * (dn + dr)),
+        "w_dkv": init_linear(k2, d, r),            # latent compression
+        "w_krope": init_linear(k3, d, dr),         # shared rope key
+        "w_ukv": init_linear(k4, r, h * (dn + dv)),  # latent expansion
+        "wo": init_linear(k5, h * dv, d),
+    }
+
+
+def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
+                  cache_pos=None, dtype=jnp.bfloat16):
+    """Multi-head Latent Attention (deepseek-v2): the KV cache stores only
+    the rank-512 latent + shared rope key per token."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+
+    q = cs(linear(params["wq"], x, cimu, dtype).reshape(b, s, h, dn + dr),
+           ("dp", None, ["tp"], None))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    c_kv = linear(params["w_dkv"], x, cimu, dtype)               # [B,S,r]
+    k_rope = linear(params["w_krope"], x, cimu, dtype)[:, :, None, :]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)       # [B,S,1,dr]
+
+    if cache_pos is None:
+        full_c, full_rope, q_off = c_kv, k_rope, 0
+        new_cache = None
+        if cache is not None:   # prefill into the pre-allocated cache
+            cc = jax.lax.dynamic_update_slice(
+                cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, 0, 0))
+            cr = jax.lax.dynamic_update_slice(
+                cache.k_rope, k_rope[:, :, 0, :].astype(cache.k_rope.dtype),
+                (0, 0, 0))
+            new_cache = MLACache(cc, cr)
+    else:
+        cc = jax.lax.dynamic_update_slice(cache.c_kv, c_kv, (0, cache_pos, 0))
+        cr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope[:, :, 0, :],
+                                          (0, cache_pos, 0))
+        new_cache = MLACache(cc, cr)
+        full_c, full_rope, q_off = cc, cr[:, :, None, :], cache_pos
+
+    kvu = linear(params["w_ukv"], full_c, cimu, dtype)
+    kvu = cs(kvu.reshape(b, full_c.shape[1], h, dn + dv),
+             ("dp", None, ["tp"], None))
+    k_nope, v = kvu[..., :dn], kvu[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(full_rope, k_nope.shape[:3] + (dr,))], axis=-1)
+
+    o = sdpa(q, k, v, causal=True, q_offset=q_off,
+             scale=(dn + dr) ** -0.5, dtype=dtype,
+             scan_remat=cfg.attn_scan_remat, bf16_probs=cfg.attn_bf16_probs)
+    out = linear(params["wo"], o.reshape(b, s, h * dv), cimu, dtype)
+    return out, new_cache
+
+
+# -------------------------------------------------------- cross-attention
+
+def init_cross_attention(key, cfg) -> dict:
+    return init_attention(key, cfg)
+
+
+def cross_attention(params, x, enc_kv, cfg, dtype=jnp.bfloat16):
+    """Decoder->encoder attention (whisper); enc_kv = (k, v) precomputed."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    q = linear(params["wq"], x, cimu, dtype).reshape(b, s, h, hd)
+    k, v = enc_kv
+    o = sdpa(q, k, v, causal=False, dtype=dtype)
+    return linear(params["wo"], o.reshape(b, s, h * hd), cimu, dtype)
+
+
+def encode_cross_kv(params, enc_out, cfg, dtype=jnp.bfloat16):
+    b, s, _ = enc_out.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    k = linear(params["wk"], enc_out, cimu, dtype).reshape(b, s, kv, hd)
+    v = linear(params["wv"], enc_out, cimu, dtype).reshape(b, s, kv, hd)
+    return k, v

@@ -1,0 +1,96 @@
+"""The paper's CIFAR-10 networks (Fig. 11), mapped exactly as the chip maps
+them: every 3x3 conv is im2col'd into an MVM of dimensionality
+N = 9*C_in (<= 2304 = 3*3*256, the CIMA's designed-for shape) and executed
+through the CIMU; batch-norm folds into the near-memory datapath's
+scale/bias; Network B's binary activations are the ABN comparator.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cifar_nets import CnnConfig
+from repro.core.cimu import cimu_matmul
+from repro.optim.qat import ste_sign
+
+from .layers import truncated_normal_init
+
+
+def _im2col(x: jax.Array, k: int = 3) -> jax.Array:
+    """x: [B, H, W, C] -> patches [B, H, W, k*k*C] (SAME padding) — the
+    w2b Reshaping Buffer's window extraction (Fig. 6a)."""
+    b, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (k, k), (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches returns [B, H, W, C*k*k]
+    return patches
+
+
+def init_cnn(key, net: CnnConfig) -> dict:
+    params: dict = {"layers": []}
+    for layer in net.layers:
+        key, k1 = jax.random.split(key)
+        n = layer.cin * (9 if layer.kind == "conv" else 1)
+        p = {
+            "w": truncated_normal_init(k1, (n, layer.cout), n ** -0.5),
+            "bn_scale": jnp.ones((layer.cout,), jnp.float32),
+            "bn_bias": jnp.zeros((layer.cout,), jnp.float32),
+        }
+        params["layers"].append(p)
+    return params
+
+
+def _batchnorm(y, scale, bias, eps=1e-5):
+    axes = tuple(range(y.ndim - 1))
+    mu = jnp.mean(y, axes, keepdims=True)
+    var = jnp.var(y, axes, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def cnn_forward(params, images, net: CnnConfig,
+                mode: Optional[str] = None) -> jax.Array:
+    """images: [B, 32, 32, 3] -> logits [B, 10].
+
+    ``mode`` overrides net.cimu.mode (digital / digital_int / cimu) so the
+    same parameters can be evaluated under the ideal and the chip model —
+    the Fig. 11 accuracy comparison."""
+    import dataclasses
+
+    cimu = net.cimu if mode is None else dataclasses.replace(net.cimu,
+                                                             mode=mode)
+    x = images
+    n_layers = len(net.layers)
+    for i, (layer, p) in enumerate(zip(net.layers, params["layers"])):
+        if layer.kind == "conv":
+            h = _im2col(x)                               # [B,H,W,9*Cin]
+        else:
+            h = x.reshape(x.shape[0], -1)                # flatten
+        if cimu.mode == "digital":
+            y = h @ p["w"]
+        else:
+            y = cimu_matmul(h.astype(jnp.float32), p["w"], cimu)
+        y = _batchnorm(y, p["bn_scale"], p["bn_bias"])   # datapath scale/bias
+        last = i == n_layers - 1
+        if not last:
+            if net.readout == "abn":
+                y = ste_sign(y)                          # ABN comparator
+            else:
+                y = jax.nn.relu(y)
+        if layer.kind == "conv" and layer.pool:
+            b, hh, ww, c = y.shape
+            y = y.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
+        x = y
+    return x
+
+
+def cnn_loss(params, batch, net: CnnConfig, mode: Optional[str] = None):
+    logits = cnn_forward(params, batch["images"], net, mode)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - ll)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"loss": loss, "acc": acc}

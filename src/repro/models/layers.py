@@ -1,0 +1,138 @@
+"""Foundational model layers.
+
+Every weight-bearing projection goes through :func:`linear`, which routes
+to the CIMU (the paper's accelerator) when the arch config enables it —
+this is how the paper's technique is a first-class feature of the
+framework rather than a bolt-on.  Master parameters are float32; digital
+compute casts to the configured activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cimu import CimuConfig, cimu_matmul
+
+
+def truncated_normal_init(key, shape, stddev):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                stddev: Optional[float] = None) -> dict:
+    if stddev is None:
+        stddev = d_in ** -0.5
+    p = {"w": truncated_normal_init(key, (d_in, d_out), stddev)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def linear(params: dict, x: jax.Array, cimu: Optional[CimuConfig] = None,
+           dtype=jnp.bfloat16) -> jax.Array:
+    """x @ w (+ b), through the CIMU when configured."""
+    w = params["w"]
+    if cimu is not None and cimu.mode != "digital":
+        y = cimu_matmul(x.astype(jnp.float32), w, cimu).astype(dtype)
+    else:
+        y = jnp.einsum("...n,nm->...m", x.astype(dtype), w.astype(dtype))
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def init_norm(key, d: int, kind: str) -> dict:
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    if kind == "nonparametric":
+        return {}
+    raise ValueError(kind)
+
+
+def norm(params: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        y = y * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int) -> dict:
+    # d**-0.5 keeps tied-head logits at unit variance under an RMS-normed
+    # final hidden state
+    return {"table": truncated_normal_init(key, (vocab, d), d ** -0.5)}
+
+
+def embed(params: dict, tokens: jax.Array, dtype=jnp.bfloat16,
+          onehot: bool = False) -> jax.Array:
+    if onehot:
+        # gather on a 2-D-sharded table forces an involuntary full
+        # all-gather in SPMD; the one-hot matmul form keeps the contraction
+        # sharded on the vocab axis instead (§Perf knob)
+        oh = jax.nn.one_hot(tokens, params["table"].shape[0], dtype=dtype)
+        return jnp.einsum("...v,vd->...d", oh, params["table"].astype(dtype))
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: dict, x: jax.Array, cimu: Optional[CimuConfig] = None,
+            dtype=jnp.bfloat16) -> jax.Array:
+    """LM head (tied): x @ table.T — a static-weight MVM, CIMU-eligible."""
+    w = params["table"].T
+    if cimu is not None and cimu.mode != "digital":
+        return cimu_matmul(x.astype(jnp.float32), w, cimu).astype(jnp.float32)
+    return jnp.einsum("...d,dv->...v", x.astype(dtype), w.astype(dtype)
+                      ).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------- rotary
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D] (D even), positions: [B, S] or [S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # [D/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+def init_mlp(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        return {"gate": init_linear(k1, d, f), "up": init_linear(k2, d, f),
+                "down": init_linear(k3, f, d)}
+    return {"up": init_linear(k1, d, f), "down": init_linear(k2, f, d)}
+
+
+def mlp(params: dict, x: jax.Array, cfg, dtype=jnp.bfloat16) -> jax.Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    if "gate" in params:
+        h = act(linear(params["gate"], x, cimu, dtype)) * \
+            linear(params["up"], x, cimu, dtype)
+    else:
+        h = act(linear(params["up"], x, cimu, dtype))
+    return linear(params["down"], h, cimu, dtype)

@@ -1,0 +1,260 @@
+"""Unified model API across all assigned architectures.
+
+* ``init_params(cfg, key)``      — full parameter pytree.
+* ``forward(params, tokens, cfg)``         — full-sequence logits (train).
+* ``loss_fn(params, batch, cfg)``          — next-token CE + aux losses.
+* ``init_cache / prefill / decode_step``   — serving path with KV/state cache.
+
+Modality frontends ([vlm]/[audio]) are stubs per the assignment: the batch
+carries precomputed patch/frame embeddings at d_model which early-fuse into
+the leading ``frontend_seq`` positions (decoder-only) or form the encoder
+input (whisper).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import transformer as tfm
+from .layers import (embed, init_embedding, init_linear, init_norm, linear,
+                     norm, truncated_normal_init, unembed)
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------- params
+
+def init_params(cfg, key, max_seq: int = 32768) -> dict:
+    k_emb, k_stack, k_norm, k_head, k_enc, k_pos = jax.random.split(key, 6)
+    p: dict = {
+        "embed": init_embedding(k_emb, cfg.vocab, cfg.d_model),
+        "stack": tfm.init_stack(k_stack, cfg),
+        "final_norm": init_norm(k_norm, cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(k_head, cfg.d_model, cfg.vocab)
+    if cfg.is_encdec:
+        import dataclasses
+
+        enc_cfg = dataclasses.replace(cfg, n_layers=cfg.enc_layers,
+                                      block_pattern=(), causal=False)
+        p["encoder"] = {
+            "stack": tfm.init_stack(k_enc, enc_cfg),
+            "final_norm": init_norm(k_enc, cfg.d_model, cfg.norm),
+            "pos": truncated_normal_init(k_pos, (cfg.frontend_seq,
+                                                 cfg.d_model), 0.02),
+        }
+        # decoder learned positions (whisper uses learned, not rope)
+        p["dec_pos"] = truncated_normal_init(k_pos, (max_seq, cfg.d_model),
+                                             0.02)
+        # per-decoder-layer cross-attention, scanned
+        n = cfg.n_layers
+        keys = jax.random.split(k_enc, n)
+        p["cross"] = jax.vmap(
+            lambda k_: {
+                "ln": init_norm(k_, cfg.d_model, cfg.norm),
+                "attn": attn_mod.init_cross_attention(k_, cfg),
+            })(keys)
+    return p
+
+
+# ------------------------------------------------------------- embedding
+
+def _embed_inputs(params, tokens, cfg, frontend_embeds, dtype):
+    x = embed(params["embed"], tokens, dtype, cfg.onehot_embed)
+    if cfg.frontend != "none" and not cfg.is_encdec and frontend_embeds is not None:
+        f = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(dtype), x[:, f:]], axis=1)
+    return x
+
+
+# ----------------------------------------------------------- whisper path
+
+def _encode(params, frontend_embeds, cfg, dtype):
+    import dataclasses
+
+    enc_cfg = dataclasses.replace(cfg, n_layers=cfg.enc_layers,
+                                  block_pattern=(), causal=False)
+    enc = params["encoder"]
+    x = frontend_embeds.astype(dtype) + enc["pos"][None].astype(dtype)
+    positions = jnp.arange(x.shape[1])
+    x, _, _ = tfm.apply_stack(enc["stack"], x, enc_cfg, positions,
+                              dtype=dtype)
+    return norm(enc["final_norm"], x, cfg.norm)
+
+
+def _decoder_with_cross(params, x, cfg, positions, cross_kv, cache,
+                        cache_pos, dtype):
+    """Whisper decoder: scanned (self-attn block + cross-attn) layers.
+    ``cross_kv``: per-layer stacked (k, v) from the encoder."""
+    def body(carry, xs):
+        x = carry
+        p_block, p_cross, ckv, c = xs
+        x, nc, _ = tfm.apply_block(p_block, x, cfg, "attn", positions,
+                                   c, cache_pos, dtype)
+        h = norm(p_cross["ln"], x, cfg.norm)
+        x = x + attn_mod.cross_attention(p_cross["attn"], h, ckv, cfg, dtype)
+        return x, nc
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    scanned = params["stack"]["scanned"]["u0"]
+    cache_xs = cache["scanned"]["u0"] if cache is not None else None
+    if cache_xs is None:
+        x, ncs = jax.lax.scan(
+            lambda c, p: body(c, (p[0], p[1], p[2], None)),
+            x, (scanned, params["cross"], cross_kv))
+    else:
+        x, ncs = jax.lax.scan(
+            body, x, (scanned, params["cross"], cross_kv, cache_xs))
+    new_cache = {"prefix": [], "scanned": {"u0": ncs}, "suffix": []} \
+        if cache is not None else None
+    return x, new_cache
+
+
+def _cross_kv_all_layers(params, enc_out, cfg, dtype):
+    return jax.vmap(
+        lambda pc: attn_mod.encode_cross_kv(pc["attn"], enc_out, cfg, dtype)
+    )(params["cross"])
+
+
+# ---------------------------------------------------------------- forward
+
+def forward(params, tokens, cfg, frontend_embeds=None, positions=None):
+    """Full-sequence logits [B, S, vocab] (training / teacher forcing)."""
+    dtype = _dtype(cfg)
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s)
+
+    if cfg.is_encdec:
+        if frontend_embeds is None:
+            frontend_embeds = jnp.zeros((b, cfg.frontend_seq, cfg.d_model),
+                                        dtype)
+        enc_out = _encode(params, frontend_embeds, cfg, dtype)
+        cross_kv = _cross_kv_all_layers(params, enc_out, cfg, dtype)
+        x = embed(params["embed"], tokens, dtype, cfg.onehot_embed)
+        x = x + params["dec_pos"][:s][None].astype(dtype)
+        x, _ = _decoder_with_cross(params, x, cfg, positions, cross_kv,
+                                   None, None, dtype)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x = _embed_inputs(params, tokens, cfg, frontend_embeds, dtype)
+        x, _, aux = tfm.apply_stack(params["stack"], x, cfg, positions,
+                                    dtype=dtype)
+    x = norm(params["final_norm"], x, cfg.norm)
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cimu, dtype)
+    else:
+        logits = linear(params["lm_head"], x, cimu, dtype).astype(jnp.float32)
+    return logits, aux
+
+
+def loss_fn(params, batch: dict, cfg):
+    """Next-token cross entropy (+ MoE aux).  batch: tokens [B,S] (+ optional
+    loss_mask, frontend_embeds)."""
+    tokens = batch["tokens"]
+    logits, aux = forward(params, tokens, cfg,
+                          frontend_embeds=batch.get("frontend_embeds"))
+    targets = tokens[:, 1:]
+    lg = logits[:, :-1]
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    tgt_logit = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt_logit
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+        if cfg.frontend != "none" and not cfg.is_encdec:
+            pos = jnp.arange(targets.shape[1])[None, :]
+            mask = mask * (pos >= cfg.frontend_seq)
+    else:
+        mask = mask[:, 1:].astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    loss = ce + 0.01 * aux
+    metrics = {"loss": loss, "ce": ce, "aux": aux,
+               "tokens": denom}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------- serving
+
+class DecodeCache(NamedTuple):
+    layers: Any
+    pos: jax.Array                      # next write position (scalar int32)
+    cross_kv: Any = None                # whisper: per-layer encoder k/v
+
+
+def init_cache(cfg, batch: int, s_max: int) -> DecodeCache:
+    dtype = _dtype(cfg)
+    layers = tfm.init_stack_cache(cfg, batch, s_max, dtype)
+    return DecodeCache(layers, jnp.zeros((), jnp.int32), None)
+
+
+def prefill(params, tokens, cfg, s_max: Optional[int] = None,
+            frontend_embeds=None):
+    """Run the full prompt; returns (last-position logits, DecodeCache)."""
+    dtype = _dtype(cfg)
+    b, s = tokens.shape
+    if s_max is None:
+        s_max = s
+    positions = jnp.arange(s)
+    cache = init_cache(cfg, b, s_max)
+
+    if cfg.is_encdec:
+        if frontend_embeds is None:
+            frontend_embeds = jnp.zeros((b, cfg.frontend_seq, cfg.d_model),
+                                        dtype)
+        enc_out = _encode(params, frontend_embeds, cfg, dtype)
+        cross_kv = _cross_kv_all_layers(params, enc_out, cfg, dtype)
+        x = embed(params["embed"], tokens, dtype, cfg.onehot_embed)
+        x = x + params["dec_pos"][:s][None].astype(dtype)
+        x, layers = _decoder_with_cross(params, x, cfg, positions, cross_kv,
+                                        cache.layers, None, dtype)
+    else:
+        cross_kv = None
+        x = _embed_inputs(params, tokens, cfg, frontend_embeds, dtype)
+        x, layers, _ = tfm.apply_stack(params["stack"], x, cfg, positions,
+                                       cache.layers, dtype=dtype)
+    x = norm(params["final_norm"], x[:, -1:], cfg.norm)
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cimu, dtype)
+    else:
+        logits = linear(params["lm_head"], x, cimu, dtype).astype(jnp.float32)
+    return logits[:, 0], DecodeCache(layers, jnp.asarray(s, jnp.int32),
+                                     cross_kv)
+
+
+def decode_step(params, token, cache: DecodeCache, cfg):
+    """One decode step.  token: [B] int32.  Returns (logits [B, vocab],
+    updated cache)."""
+    dtype = _dtype(cfg)
+    b = token.shape[0]
+    pos = cache.pos
+    positions = pos[None, None] + jnp.zeros((b, 1), jnp.int32)
+    x = embed(params["embed"], token[:, None], dtype, cfg.onehot_embed)
+
+    if cfg.is_encdec:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos, 1, axis=0)[None].astype(dtype)
+        x, layers = _decoder_with_cross(params, x, cfg, positions,
+                                        cache.cross_kv, cache.layers, pos,
+                                        dtype)
+    else:
+        x, layers, _ = tfm.apply_stack(params["stack"], x, cfg, positions,
+                                       cache.layers, cache_pos=pos,
+                                       dtype=dtype)
+    x = norm(params["final_norm"], x, cfg.norm)
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, cimu, dtype)
+    else:
+        logits = linear(params["lm_head"], x, cimu, dtype).astype(jnp.float32)
+    return logits[:, 0], DecodeCache(layers, pos + 1, cache.cross_kv)

@@ -1,0 +1,102 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The linear recurrence ``h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)``
+is evaluated with ``lax.associative_scan`` for train/prefill (O(log S)
+depth — the TPU-friendly formulation) and as a single step for decode.
+
+The recurrence itself is diagonal and data-dependent (not a stationary
+MVM), so it stays digital; the block's dense projections are
+CIMU-eligible (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear
+
+C_EXP = 8.0   # the paper's fixed exponent on the recurrent gate
+
+
+class LRUState(NamedTuple):
+    conv: jax.Array    # [B, k-1, W] causal-conv trailing state
+    h: jax.Array       # [B, W] recurrent hidden state
+
+
+def init_rglru(key, cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    # Lambda init so that a = sigmoid(L)^c is in ~[0.9, 0.999]
+    u = jax.random.uniform(k5, (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(u ** (1.0 / C_EXP) / (1.0 - u ** (1.0 / C_EXP)))
+    return {
+        "in_x": init_linear(k1, d, w),        # recurrent branch input
+        "in_gate": init_linear(k2, d, w),     # multiplicative gate branch
+        "conv_w": 0.1 * jax.random.normal(k3, (cfg.conv1d_size, w), jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "w_rg": init_linear(k4, w, w),        # recurrence gate r_t
+        "w_ig": init_linear(k6, w, w),        # input gate i_t
+        "lambda": lam,
+        "out": init_linear(k7, w, d),
+    }
+
+
+def _lru_scan(a, b):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t via associative scan over
+    pairs (a, b): (a2, b2) ∘ (a1, b1) = (a2*a1, a2*b1 + b2)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_forward(params, x, cfg, state: Optional[LRUState] = None,
+                  decode: bool = False, dtype=jnp.bfloat16):
+    """x: [B, S, d] -> (y, new_state)."""
+    from .ssm import _causal_conv   # same depthwise causal conv
+
+    from repro.distributed.autoshard import cs
+
+    b, s, d = x.shape
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    gate = jax.nn.gelu(linear(params["in_gate"], x, cimu, dtype))
+    xr = cs(linear(params["in_x"], x, cimu, dtype), ("dp", None, "tp"))
+    conv_state = state.conv if state is not None else None
+    xr, new_conv = _causal_conv(xr, params["conv_w"].astype(dtype),
+                                params["conv_b"].astype(dtype), conv_state)
+
+    xf = xr.astype(jnp.float32)
+    r = jax.nn.sigmoid(linear(params["w_rg"], xr, None, jnp.float32))
+    i = jax.nn.sigmoid(linear(params["w_ig"], xr, None, jnp.float32))
+    log_a = -C_EXP * r * jax.nn.softplus(-params["lambda"])   # log sigmoid(L)^cr
+    a = cs(jnp.exp(log_a), ("dp", None, "tp"))
+    gated = cs(jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf),
+               ("dp", None, "tp"))
+
+    if decode:
+        assert s == 1 and state is not None
+        h = a[:, 0] * state.h + gated[:, 0]
+        hs = h[:, None, :]
+    else:
+        h0 = state.h if state is not None else jnp.zeros((b, xf.shape[-1]),
+                                                         jnp.float32)
+        # fold the carried-in state into the first step's additive term
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+        hs = _lru_scan(a, gated)
+        h = hs[:, -1]
+
+    y = hs.astype(dtype) * gate
+    out = linear(params["out"], y, cimu, dtype)
+    return out, LRUState(new_conv, h)
+
+
+def init_lru_state(cfg, batch: int, dtype=jnp.bfloat16) -> LRUState:
+    return LRUState(
+        conv=jnp.zeros((batch, cfg.conv1d_size - 1, cfg.lru_width), dtype),
+        h=jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    )

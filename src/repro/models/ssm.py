@@ -1,0 +1,187 @@
+"""Mamba2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD for train/prefill: quadratic attention-like compute within
+chunks, linear recurrence across chunks (lax.scan over chunk states).
+Single-step recurrence for decode with a constant-size (conv, ssm) state —
+which is what makes the arch long_500k-eligible.
+
+CIMU applicability (DESIGN.md §5): the in/out projections are static-weight
+MVMs and run through the CIMU; the SSD scan itself multiplies two
+*activations* (state-space duality), so it stays digital — the clearest
+case of the paper's technique being inapplicable to an arch's core op.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_linear, linear
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array      # [B, k-1, conv_dim] trailing inputs for causal conv
+    ssm: jax.Array       # [B, H, P, N] recurrent state
+
+
+def dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state    # x, B, C go through the conv
+    return d_inner, n_heads, conv_dim
+
+
+def init_ssm(key, cfg) -> dict:
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # in_proj -> [z, xBC, dt]
+        "in_proj": init_linear(k1, d, 2 * d_inner + 2 * cfg.ssm_state + n_heads),
+        "conv_w": 0.1 * jax.random.normal(k2, (cfg.conv1d_size, conv_dim),
+                                          jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (n_heads,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": init_linear(k4, d_inner, d),
+    }
+
+
+def _causal_conv(x, w, b, state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [k, C].  Returns (y, new
+    trailing state [B, k-1, C])."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else state
+    return y + b, new_state
+
+
+def _segsum(dA):
+    """Cumulative decay matrix: L[i,j] = sum_{j<l<=i} dA_l (lower-tri)."""
+    q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    i = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    return jnp.where(i >= j, L, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """Chunked SSD.  x: [B,S,H,P]; dt: [B,S,H]; A: [H]; B_,C_: [B,S,N].
+    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b, s, h, p = x.shape
+    n = B_.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    # -> [B, nc, Q, ...]
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B_.reshape(b, nc, chunk, n)
+    Cc = C_.reshape(b, nc, chunk, n)
+
+    dA = dtc * (-jnp.exp(A))[None, None, None, :]          # [B,nc,Q,H] (<0)
+    dA = jnp.transpose(dA, (0, 1, 3, 2))                   # [B,nc,H,Q]
+    L = jnp.exp(_segsum(dA))                               # [B,nc,H,Q,Q]
+
+    xdt = xc * jnp.transpose(dtc, (0, 1, 2, 3))[..., None]  # dt-weighted input
+    # intra-chunk (diagonal blocks): y = (C B^T ∘ L) (dt x)
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)             # [B,nc,Q,Q]
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp",
+                        cb, L, xdt.transpose(0, 1, 2, 3, 4).reshape(
+                            b, nc, chunk, h, p))
+    # states at chunk ends: S_c = sum_k exp(dA_cum_end - dA_cum_k) B_k x_k
+    dA_cum = jnp.cumsum(dA, axis=-1)                       # [B,nc,H,Q]
+    decay_to_end = jnp.exp(dA_cum[..., -1:] - dA_cum)      # [B,nc,H,Q]
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn",
+                        Bc, decay_to_end, xdt)             # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(dA_cum[..., -1])                 # [B,nc,H]
+
+    # inter-chunk recurrence over nc (scan)
+    def step(carry, xs):
+        st_in = carry
+        st_c, dec_c = xs
+        new = st_in * dec_c[..., None, None] + st_c
+        return new, st_in
+
+    states_t = states.transpose(1, 0, 2, 3, 4)             # [nc,B,H,P,N]
+    decay_t = chunk_decay.transpose(1, 0, 2)               # [nc,B,H]
+    init = jnp.zeros_like(states_t[0])
+    final_state, prev_states = jax.lax.scan(step, init, (states_t, decay_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [B,nc,H,P,N]
+
+    # inter-chunk contribution: y += C_q exp(dA_cum_q) S_prev
+    in_decay = jnp.exp(dA_cum)                             # [B,nc,H,Q]
+    y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp", Cc, in_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, nc * chunk, h, p)[:, :s]
+    return y, final_state
+
+
+def ssm_forward(params, x, cfg, state: Optional[SSMState] = None,
+                decode: bool = False, dtype=jnp.bfloat16):
+    """Full mixer.  x: [B, S, d].  Returns (y, new_state)."""
+    b, s, d = x.shape
+    d_inner, n_heads, conv_dim = dims(cfg)
+    n = cfg.ssm_state
+    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+
+    zxbcdt = linear(params["in_proj"], x, cimu, dtype)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = jax.nn.softplus(
+        zxbcdt[..., -n_heads:].astype(jnp.float32) + params["dt_bias"])
+
+    conv_state = state.conv if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"].astype(dtype),
+                                 params["conv_b"].astype(dtype), conv_state)
+    xbc = jax.nn.silu(xbc)
+    from repro.distributed.autoshard import cs
+    xs = cs(xbc[..., :d_inner].reshape(b, s, n_heads, cfg.ssm_head_dim),
+            ("dp", None, ["tp"], ["tp"]))
+    B_ = xbc[..., d_inner:d_inner + n].astype(jnp.float32)
+    C_ = xbc[..., d_inner + n:].astype(jnp.float32)
+    A = params["A_log"]
+
+    if decode:
+        assert s == 1
+        ssm_st = state.ssm                                  # [B,H,P,N]
+        dA = jnp.exp(dt[:, 0] * (-jnp.exp(A))[None, :])     # [B,H]
+        dBx = jnp.einsum("bn,bhp,bh->bhpn", B_[:, 0],
+                         xs[:, 0].astype(jnp.float32), dt[:, 0])
+        new_ssm = ssm_st * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", C_[:, 0], new_ssm)[:, None]
+    else:
+        y, new_ssm = ssd_chunked(xs.astype(jnp.float32), dt, A, B_, C_,
+                                 cfg.ssm_chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, d_inner).astype(dtype)
+
+    # gated RMSNorm (mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
+    y = (yf * params["norm_scale"]).astype(dtype)
+
+    out = linear(params["out_proj"], y, cimu, dtype)
+    return out, SSMState(new_conv, new_ssm)
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.bfloat16) -> SSMState:
+    d_inner, n_heads, conv_dim = dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv1d_size - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      jnp.float32),
+    )

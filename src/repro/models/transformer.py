@@ -1,0 +1,190 @@
+"""Decoder blocks and scanned layer stacks.
+
+Stacks are compiled with ``lax.scan`` over stacked layer parameters so a
+48-layer model lowers a single layer body once — essential for the
+512-device dry-run compile times.  Heterogeneous patterns (recurrentgemma's
+(rec, rec, attn)) scan over the repeating *unit*; ragged prefixes (the
+deepseek dense-FFN first layer) and suffixes apply individually.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .layers import init_mlp, init_norm, mlp, norm
+
+
+# ----------------------------------------------------------- single block
+
+def init_block(key, cfg, kind: str) -> dict:
+    keys = jax.random.split(key, 4)
+    p: dict = {"ln1": init_norm(keys[0], cfg.d_model, cfg.norm)}
+    if kind in ("attn", "moe"):
+        p["attn"] = (attn_mod.init_mla(keys[1], cfg) if cfg.mla
+                     else attn_mod.init_attention(keys[1], cfg))
+    elif kind == "rec":
+        p["rec"] = rglru_mod.init_rglru(keys[1], cfg)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(keys[1], cfg)
+        return p                       # mamba blocks have no separate MLP
+    else:
+        raise ValueError(kind)
+    p["ln2"] = init_norm(keys[2], cfg.d_model, cfg.norm)
+    if kind == "moe":
+        p["moe"] = moe_mod.init_moe(keys[3], cfg)
+    else:
+        p["mlp"] = init_mlp(keys[3], cfg)
+    return p
+
+
+def init_block_cache(cfg, kind: str, batch: int, s_max: int, dtype):
+    if kind in ("attn", "moe"):
+        if cfg.mla:
+            return attn_mod.init_mla_cache(cfg, batch, s_max, dtype)
+        return attn_mod.init_kv_cache(cfg, batch, s_max, dtype)
+    if kind == "rec":
+        return rglru_mod.init_lru_state(cfg, batch, dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_state(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def apply_block(params: dict, x, cfg, kind: str, positions, cache=None,
+                cache_pos=None, dtype=jnp.bfloat16):
+    """Returns (x, new_cache, aux_loss)."""
+    from repro.distributed.autoshard import cs
+
+    decode = cache_pos is not None
+    # residual stream: DP on batch (+ optional Megatron-SP seq sharding)
+    x = cs(x, ("dp", ["tp"] if cfg.sp_residual else None, None))
+    h = norm(params["ln1"], x, cfg.norm)
+    if kind in ("attn", "moe"):
+        fn = attn_mod.mla_attention if cfg.mla else attn_mod.attention
+        mix, new_cache = fn(params["attn"], h, cfg, positions, cache,
+                            cache_pos, dtype)
+    elif kind == "rec":
+        mix, new_cache = rglru_mod.rglru_forward(params["rec"], h, cfg,
+                                                 cache, decode, dtype)
+    elif kind == "ssm":
+        mix, new_cache = ssm_mod.ssm_forward(params["ssm"], h, cfg,
+                                             cache, decode, dtype)
+        return x + mix, new_cache, jnp.zeros((), jnp.float32)
+    x = x + mix
+    h2 = norm(params["ln2"], x, cfg.norm)
+    if kind == "moe":
+        ff, aux = moe_mod.moe_ffn(params["moe"], h2, cfg, dtype)
+    else:
+        ff, aux = mlp(params["mlp"], h2, cfg, dtype), jnp.zeros((), jnp.float32)
+    return x + ff, new_cache, aux
+
+
+# ------------------------------------------------------------- the stack
+
+class StackLayout(NamedTuple):
+    prefix: tuple          # block kinds applied individually first
+    unit: tuple            # repeating unit, scanned
+    n_rep: int
+    suffix: tuple          # trailing ragged layers
+
+
+def stack_layout(cfg) -> StackLayout:
+    pattern = cfg.pattern()
+    k = cfg.first_k_dense if cfg.moe else 0
+    prefix, rest = pattern[:k], pattern[k:]
+    unit = cfg.block_pattern if cfg.block_pattern else (rest[0],) if rest else ()
+    n_rep = len(rest) // len(unit) if unit else 0
+    suffix = rest[n_rep * len(unit):]
+    if not cfg.scan_layers:
+        return StackLayout(pattern, (), 0, ())
+    return StackLayout(prefix, unit, n_rep, suffix)
+
+
+def init_stack(key, cfg) -> dict:
+    layout = stack_layout(cfg)
+    out: dict = {"prefix": [], "suffix": [], "scanned": {}}
+    for kind in layout.prefix:
+        key, sub = jax.random.split(key)
+        out["prefix"].append(init_block(sub, cfg, kind))
+    for j, kind in enumerate(layout.unit):
+        key, sub = jax.random.split(key)
+        subkeys = jax.random.split(sub, layout.n_rep)
+        out["scanned"][f"u{j}"] = jax.vmap(
+            lambda k_, kind=kind: init_block(k_, cfg, kind))(subkeys)
+    for kind in layout.suffix:
+        key, sub = jax.random.split(key)
+        out["suffix"].append(init_block(sub, cfg, kind))
+    return out
+
+
+def init_stack_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> dict:
+    layout = stack_layout(cfg)
+
+    def one(kind):
+        return init_block_cache(cfg, kind, batch, s_max, dtype)
+
+    return {
+        "prefix": [one(k) for k in layout.prefix],
+        "scanned": {
+            f"u{j}": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (layout.n_rep,) + x.shape).copy(),
+                one(kind))
+            for j, kind in enumerate(layout.unit)
+        },
+        "suffix": [one(k) for k in layout.suffix],
+    }
+
+
+def apply_stack(params: dict, x, cfg, positions, cache: Optional[dict] = None,
+                cache_pos=None, dtype=jnp.bfloat16):
+    """Returns (x, new_cache_or_None, total_aux_loss)."""
+    layout = stack_layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: dict = {"prefix": [], "scanned": {}, "suffix": []}
+
+    def run_one(kind, p, x, c):
+        return apply_block(p, x, cfg, kind, positions, c, cache_pos, dtype)
+
+    for i, kind in enumerate(layout.prefix):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = run_one(kind, params["prefix"][i], x, c)
+        new_cache["prefix"].append(nc)
+        aux_total = aux_total + aux
+
+    if layout.n_rep:
+        def body(carry, xs):
+            x, aux = carry
+            p_unit, c_unit = xs
+            ncs = {}
+            for j, kind in enumerate(layout.unit):
+                c = c_unit[f"u{j}"] if c_unit is not None else None
+                x, nc, a = run_one(kind, p_unit[f"u{j}"], x, c)
+                ncs[f"u{j}"] = nc
+                aux = aux + a
+            return (x, aux), ncs
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        cache_xs = cache["scanned"] if cache is not None else None
+        if cache_xs is None:
+            # scan requires pytree-matching xs: thread params only
+            (x, aux_total), ncs = jax.lax.scan(
+                lambda c, p: body(c, (p, None)),
+                (x, aux_total), params["scanned"])
+        else:
+            (x, aux_total), ncs = jax.lax.scan(
+                body, (x, aux_total), (params["scanned"], cache_xs))
+        new_cache["scanned"] = ncs
+
+    for i, kind in enumerate(layout.suffix):
+        c = cache["suffix"][i] if cache is not None else None
+        x, nc, aux = run_one(kind, params["suffix"][i], x, c)
+        new_cache["suffix"].append(nc)
+        aux_total = aux_total + aux
+
+    return x, (new_cache if cache is not None else None), aux_total

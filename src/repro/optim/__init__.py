@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, OptState, apply_updates, init_opt_state
+from .compression import CompressionConfig, compress_decompress, init_error_state

@@ -1,0 +1,36 @@
+"""Quantization-aware-training primitives (straight-through estimators).
+
+The CIMU matmul has its own STE (repro.core.cimu); these cover the
+*activation* nonlinearities of the paper's CIFAR networks: the binarizing
+sign of the ABN path and generic fake-quantization."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.custom_vjp
+def ste_sign(x):
+    """Forward sign(x) in {-1, +1}; backward identity clipped to |x|<=1
+    (the standard BNN straight-through estimator)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def _sign_fwd(x):
+    return ste_sign(x), x
+
+
+def _sign_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+ste_sign.defvjp(_sign_fwd, _sign_bwd)
+
+
+def fake_quant(x, bits: int, axis=None):
+    """Symmetric fake quantization with STE gradients."""
+    from repro.core.quant import Coding, quantize
+
+    qt = quantize(jax.lax.stop_gradient(x), bits, Coding.XNOR, axis=axis)
+    y = qt.dequant
+    return x + jax.lax.stop_gradient(y - x)

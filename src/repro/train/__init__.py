@@ -1,0 +1,2 @@
+from .state import TrainState, init_train_state
+from .step import build_eval_step, build_train_step

@@ -1,0 +1,27 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import OptState, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    error: Any                 # gradient-compression error feedback (or None)
+    step: jax.Array
+
+
+def init_train_state(params, use_compression: bool = False) -> TrainState:
+    from repro.optim.compression import init_error_state
+
+    return TrainState(
+        params=params,
+        opt=init_opt_state(params),
+        error=init_error_state(params) if use_compression else None,
+        step=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,82 @@
+"""Train/eval step builders: gradient accumulation (microbatching),
+optional BP/BS gradient compression with error feedback, AdamW update.
+
+Under pjit the returned step function is shape-polymorphic over the mesh:
+all distribution comes from in/out shardings (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.optim.adamw import AdamWConfig, apply_updates
+from repro.optim.compression import CompressionConfig, compress_decompress
+
+from .state import TrainState
+
+
+def _grad_fn(cfg):
+    def lf(params, batch):
+        return loss_fn(params, batch, cfg)
+
+    return jax.value_and_grad(lf, has_aux=True)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree_util.tree_map(r, batch)
+
+
+def build_train_step(cfg, opt_cfg: AdamWConfig,
+                     comp_cfg: Optional[CompressionConfig] = None,
+                     microbatches: int = 1):
+    grad_fn = _grad_fn(cfg)
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches > 1:
+            mb = _split_microbatches(batch, microbatches)
+
+            def acc_body(carry, one):
+                gsum, msum = carry
+                (_, metrics), grads = grad_fn(state.params, one)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, grads)
+                msum = jax.tree_util.tree_map(jnp.add, msum, metrics)
+                return (gsum, msum), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            zeros_m = {"loss": 0.0, "ce": 0.0, "aux": 0.0, "tokens": 0.0}
+            zeros_m = jax.tree_util.tree_map(jnp.float32, zeros_m)
+            (grads, metrics), _ = jax.lax.scan(acc_body, (zeros_g, zeros_m), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / microbatches, metrics)
+        else:
+            (_, metrics), grads = grad_fn(state.params, batch)
+
+        error = state.error
+        if comp_cfg is not None and comp_cfg.enabled:
+            grads, error = compress_decompress(grads, error, comp_cfg.bits)
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            state.params, grads, state.opt, opt_cfg)
+        metrics = {**metrics, **opt_metrics}
+        new_state = TrainState(new_params, new_opt, error, state.step + 1)
+        return new_state, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg):
+    def eval_step(params, batch):
+        _, metrics = loss_fn(params, batch, cfg)
+        return metrics
+
+    return eval_step

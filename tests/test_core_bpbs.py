@@ -1,0 +1,185 @@
+"""BP/BS MVM correctness: the paper's central computational claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adc import adc_quantize_sum, abn_binarize
+from repro.core.bpbs import BpbsConfig, bpbs_matmul_int, bpbs_matmul_int_reference
+from repro.core.cimu import CimuConfig, cimu_matmul
+from repro.core.quant import Coding, int_range
+
+CODINGS = [Coding.XNOR, Coding.AND]
+
+
+def _operands(rng, coding, ba, bx, n, m, batch=4, sparsity=0.0):
+    lo_x, hi_x = int_range(bx, coding)
+    lo_w, hi_w = int_range(ba, coding)
+    if coding == Coding.XNOR:
+        x = (2 * rng.integers(lo_x // 2, hi_x // 2 + 1, (batch, n))
+             if bx > 1 else rng.choice([-1, 1], (batch, n)))
+        w = (2 * rng.integers(lo_w // 2, hi_w // 2 + 1, (n, m))
+             if ba > 1 else rng.choice([-1, 1], (n, m)))
+    else:
+        x = rng.integers(lo_x, hi_x + 1, (batch, n))
+        w = rng.integers(lo_w, hi_w + 1, (n, m))
+    if sparsity > 0 and not (coding == Coding.XNOR and bx == 1):
+        x = x * (rng.random((batch, n)) > sparsity)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32)
+
+
+@pytest.mark.parametrize("coding", CODINGS)
+@pytest.mark.parametrize("ba,bx", [(1, 1), (2, 2), (4, 4), (3, 5), (8, 8)])
+def test_exact_when_n_255(coding, ba, bx):
+    """Paper §3: N <= 255 -> the 8-b ADC perfectly emulates integer compute."""
+    if coding == Coding.AND and 1 in (ba, bx):
+        pytest.skip("1-b AND coding is unsigned; not a paper configuration")
+    rng = np.random.default_rng(42)
+    x, w = _operands(rng, coding, ba, bx, n=255, m=16)
+    y = bpbs_matmul_int(x, w, BpbsConfig(ba=ba, bx=bx, coding=coding))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+
+
+@pytest.mark.parametrize("coding", CODINGS)
+@pytest.mark.parametrize("adaptive", [False, True])
+def test_fast_path_equals_cell_physics(coding, adaptive):
+    """The GEMM identity path == the capacitor-level CIMA model, including
+    ADC quantization, banking, and sparsity masking."""
+    rng = np.random.default_rng(7)
+    x, w = _operands(rng, coding, ba=3, bx=2, n=400, m=8, sparsity=0.3)
+    cfg = BpbsConfig(ba=3, bx=2, coding=coding, bank_n=256,
+                     adaptive_range=adaptive)
+    y1 = bpbs_matmul_int(x, w, cfg)
+    y2 = bpbs_matmul_int_reference(x, w, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_sparsity_restores_exactness():
+    """Paper §3: sparsity control implicitly limiting column levels to <=255
+    makes integer compute exact even at N=2304 (with adaptive range)."""
+    rng = np.random.default_rng(3)
+    n = 2304
+    x = np.zeros((4, n), np.float32)
+    idx = rng.choice(n, 200, replace=False)
+    x[:, idx] = 2 * rng.integers(-4, 5, (4, 200))
+    w = 2 * rng.integers(-4, 5, (n, 16))
+    x, w = jnp.asarray(x), jnp.asarray(w, jnp.float32)
+    cfg = BpbsConfig(ba=4, bx=4, coding=Coding.XNOR, adaptive_range=True)
+    np.testing.assert_array_equal(np.asarray(bpbs_matmul_int(x, w, cfg)),
+                                  np.asarray(x @ w))
+    # without adaptive range the same operands are NOT exact (N=2304 >> 255)
+    cfg0 = BpbsConfig(ba=4, bx=4, coding=Coding.XNOR, adaptive_range=False)
+    assert not np.array_equal(np.asarray(bpbs_matmul_int(x, w, cfg0)),
+                              np.asarray(x @ w))
+
+
+def test_banking_is_the_quantization_boundary():
+    """Each 2304-row bank is ADC'd separately; more banks -> more noise."""
+    rng = np.random.default_rng(11)
+    x, w = _operands(rng, Coding.XNOR, ba=4, bx=4, n=4608, m=32)
+    y_ref = np.asarray(x @ w)
+
+    def err(bank_n):
+        y = bpbs_matmul_int(x, w, BpbsConfig(ba=4, bx=4, bank_n=bank_n))
+        return float(np.mean((np.asarray(y) - y_ref) ** 2))
+
+    # a single huge bank has a coarser ADC step than two chip-sized banks
+    assert err(2304) < err(4608)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(10, 255),
+       coding=st.sampled_from(CODINGS),
+       ba=st.integers(2, 6), bx=st.integers(2, 6))
+def test_property_exactness_small_n(seed, n, coding, ba, bx):
+    """Property: for ANY operands with n <= 255, BP/BS+ADC == integer GEMM."""
+    rng = np.random.default_rng(seed)
+    x, w = _operands(rng, coding, ba, bx, n=n, m=8, sparsity=0.2)
+    y = bpbs_matmul_int(x, w, BpbsConfig(ba=ba, bx=bx, coding=coding))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x @ w))
+
+
+def test_adc_monotone_and_idempotent():
+    p = jnp.arange(0, 2305, dtype=jnp.float32)
+    q = adc_quantize_sum(p, 2304.0)
+    assert bool(jnp.all(jnp.diff(q) >= 0)), "ADC transfer must be monotone"
+    np.testing.assert_array_equal(np.asarray(adc_quantize_sum(q, 2304.0)),
+                                  np.asarray(q))
+    # exact for fs <= 255
+    p2 = jnp.arange(0, 200, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(adc_quantize_sum(p2, 199.0)),
+                                  np.asarray(p2))
+
+
+def test_abn_threshold():
+    p = jnp.arange(0.0, 256.0)
+    out = abn_binarize(p, threshold_code=32.0, full_scale=255.0)
+    # 6-b DAC: threshold = 32/63*255 = 129.5
+    assert float(out[129]) == -1.0 and float(out[130]) == 1.0
+    assert set(np.unique(np.asarray(out))) <= {-1.0, 1.0}
+
+
+def test_cimu_matmul_chip_equals_ideal_with_small_banks():
+    """Activity-gated banks of <= 255 rows make the chip model EXACTLY equal
+    to bit-true integer compute for arbitrary N (paper §3) — each bank's
+    column dynamic range then fits the 8-b ADC."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 512)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(512, 64)), jnp.float32)
+    y_int = cimu_matmul(x, w, CimuConfig(mode="digital_int", ba=4, bx=4))
+    y_chip = cimu_matmul(x, w, CimuConfig(mode="cimu", ba=4, bx=4, bank_n=255))
+    np.testing.assert_allclose(np.asarray(y_chip), np.asarray(y_int),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_cimu_adc_noise_matches_analytic_bound():
+    """At N=512 (> 255) the ADC adds quantization noise; its magnitude must
+    match the analytic model: per plane-pair dot, err ~ U(+-step) with
+    step = N/255, recombined with the BP/BS significance weights."""
+    rng = np.random.default_rng(0)
+    n, m, ba, bx = 512, 64, 4, 4
+    x = jnp.asarray(rng.normal(size=(64, n)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    y_int = cimu_matmul(x, w, CimuConfig(mode="digital_int", ba=ba, bx=bx))
+    y_chip = cimu_matmul(x, w, CimuConfig(mode="cimu", ba=ba, bx=bx))
+    from repro.core.quant import plane_weights, quantize
+    qx = quantize(x, bx, Coding.XNOR)
+    qw = quantize(w, ba, Coding.XNOR, axis=1)
+    # d_hat = 2 * p_hat: uniform reconstruction error of variance step^2/12
+    step = n / 255.0
+    wsum = float(np.sum(plane_weights(ba, Coding.XNOR) ** 2)) * \
+           float(np.sum(plane_weights(bx, Coding.XNOR) ** 2))
+    pred_var = wsum * 4.0 * step ** 2 / 12.0
+    err_int = (np.asarray(y_chip) - np.asarray(y_int)) / (
+        np.asarray(qx.scale) * np.asarray(qw.scale).reshape(1, -1))
+    meas_var = float(np.mean(err_int ** 2))
+    # order-of-magnitude check: deterministic ADC errors correlate across
+    # plane pairs (shared operands), inflating variance over the independent
+    # model by a small constant factor; catastrophic scaling bugs would be
+    # orders of magnitude off.
+    assert 0.1 * pred_var < meas_var < 8.0 * pred_var, (meas_var, pred_var)
+
+
+def test_cimu_ste_gradients():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(128, 16)), jnp.float32)
+
+    def loss(x, w):
+        return jnp.sum(cimu_matmul(x, w, CimuConfig(mode="cimu", ba=4, bx=4)) ** 2)
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert bool(jnp.isfinite(gx).all() and jnp.isfinite(gw).all())
+    assert gx.shape == x.shape and gw.shape == w.shape
+
+
+def test_cimu_matmul_jit_and_batch_dims():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 3, 100)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(100, 24)), jnp.float32)
+    cfg = CimuConfig(mode="cimu", ba=4, bx=4)
+    y = jax.jit(lambda x, w: cimu_matmul(x, w, cfg))(x, w)
+    assert y.shape == (2, 3, 24)
+    assert bool(jnp.isfinite(y).all())

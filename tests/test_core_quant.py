@@ -1,0 +1,84 @@
+"""Unit + property tests for bit-plane codings (repro.core.quant)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (
+    Coding, int_range, int_to_planes, n_levels, plane_weights, planes_to_int,
+    quantize,
+)
+
+CODINGS = [Coding.XNOR, Coding.AND]
+
+
+def grid(bits, coding):
+    lo, hi = int_range(bits, coding)
+    if coding == Coding.XNOR and bits > 1:
+        return np.arange(lo, hi + 1, 2, dtype=np.float32)
+    if coding == Coding.XNOR:
+        return np.array([-1.0, 1.0], np.float32)
+    return np.arange(lo, hi + 1, dtype=np.float32)
+
+
+@pytest.mark.parametrize("coding", CODINGS)
+@pytest.mark.parametrize("bits", range(1, 9))
+def test_plane_roundtrip_exhaustive(coding, bits):
+    q = grid(bits, coding)
+    planes = int_to_planes(jnp.asarray(q), bits, coding)
+    back = planes_to_int(planes, bits, coding)
+    np.testing.assert_array_equal(np.asarray(back), q)
+
+
+@pytest.mark.parametrize("coding", CODINGS)
+@pytest.mark.parametrize("bits", range(1, 9))
+def test_plane_alphabet(coding, bits):
+    q = grid(bits, coding)
+    p = np.asarray(int_to_planes(jnp.asarray(q), bits, coding))
+    allowed = {-1.0, 1.0} if coding == Coding.XNOR else {0.0, 1.0}
+    assert set(np.unique(p)) <= allowed
+
+
+@pytest.mark.parametrize("coding", CODINGS)
+@pytest.mark.parametrize("bits", range(1, 9))
+def test_plane_count_matches_bits(coding, bits):
+    """B_A bits -> B_A parallel columns (paper Fig. 4)."""
+    assert len(plane_weights(bits, coding)) == bits
+
+
+def test_xnor_grid_has_zero():
+    """The two-LSB-plane trick makes zero representable (paper §2)."""
+    for bits in range(2, 9):
+        assert 0.0 in grid(bits, Coding.XNOR)
+        assert n_levels(bits, Coding.XNOR) == 2 ** (bits - 1) + 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    bits=st.integers(2, 8),
+    coding=st.sampled_from(CODINGS),
+    data=st.lists(st.floats(-10, 10, allow_nan=False), min_size=4, max_size=64),
+)
+def test_quantize_on_grid_and_bounded_error(bits, coding, data):
+    x = jnp.asarray(np.array(data, np.float32))
+    qt = quantize(x, bits, coding)
+    g = grid(bits, coding)
+    q = np.asarray(qt.q)
+    assert np.all(np.isin(q, g)), "quantized values must lie on the coding grid"
+    # reconstruction error bounded by the grid step (a full step at +amax for
+    # the asymmetric 2's-complement AND grid, half a step elsewhere)
+    step = float(qt.scale) * (2.0 if coding == Coding.XNOR else 1.0)
+    bound = step * (0.5 if coding == Coding.XNOR else 1.0)
+    err = np.abs(np.asarray(qt.dequant) - np.asarray(x))
+    assert np.all(err <= bound + 1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(1, 8),
+       coding=st.sampled_from(CODINGS))
+def test_roundtrip_random(seed, bits, coding):
+    rng = np.random.default_rng(seed)
+    q = rng.choice(grid(bits, coding), size=(17,))
+    planes = int_to_planes(jnp.asarray(q), bits, coding)
+    np.testing.assert_array_equal(np.asarray(planes_to_int(planes, bits, coding)), q)
