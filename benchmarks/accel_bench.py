@@ -1,0 +1,52 @@
+"""Execution-backend parity + cost through the unified repro.accel API.
+
+One chip-shaped MVM dispatched through every registered backend:
+
+* wall time per backend (interpret-mode on CPU — relative only),
+* SQNR of each quantizing backend vs the ``digital`` float result,
+* bit-exactness of ``bpbs`` vs ``digital_int`` under ``ideal_adc``,
+* the traced chip-model energy/cycles (:func:`repro.accel.energy_summary`)
+  for the exact specs the compute used — the hook that keeps the cost
+  model and the numerics from drifting apart.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import accel
+
+from .common import emit, time_call
+
+
+def run():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 2304)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(2304, 64)), jnp.float32)
+    y_ref = np.asarray(x @ w)
+
+    for backend in ("digital", "digital_int", "bpbs", "pallas"):
+        spec = accel.ExecSpec(backend=backend, ba=4, bx=4)
+        us = time_call(lambda spec=spec: accel.matmul(x, w, spec),
+                       iters=3, warmup=1)
+        y = np.asarray(accel.matmul(x, w, spec), np.float32)
+        err = np.mean((y - y_ref) ** 2)
+        sqnr = 10 * np.log10(np.mean(y_ref ** 2) / err) if err > 0 else np.inf
+        emit(f"accel_backend_{backend}", us, f"sqnr_db_vs_float={sqnr:.1f}")
+
+    # ideal-ADC BP/BS must equal the bit-true integer reference exactly
+    y_int = accel.matmul(x, w, accel.ExecSpec(backend="digital_int"))
+    y_bp = accel.matmul(x, w, accel.ExecSpec(backend="bpbs", ideal_adc=True))
+    max_diff = float(jnp.abs(y_int - y_bp).max())
+    assert max_diff == 0.0, max_diff
+    emit("accel_bpbs_ideal_adc_exact", 0.0, f"max_diff={max_diff}")
+
+    # energy hook: the traced records carry the same spec the compute used
+    with accel.trace() as records:
+        accel.matmul(x, w, accel.ExecSpec(backend="bpbs", ba=4, bx=4,
+                                          tag="bench.mvm"))
+    es = accel.energy_summary(records, vdd=0.85, sparsity=0.5)
+    assert es["total_pj"] > 0 and es["total_cycles"] > 0
+    emit("accel_energy_trace", 0.0,
+         f"mvms={sum(r.calls for r in records)};"
+         f"pj={es['total_pj']:.3g};cycles={es['total_cycles']}")

@@ -9,6 +9,7 @@ doubles as the reproduction gate:
   fig10_transfer  — Fig. 10 column transfer functions + multi-bit match
   fig11_networks  — Fig. 11 network demos + summary/comparison headline
   kernels_bench   — Pallas kernel tiles: VMEM footprint, arith intensity
+  accel_bench     — backend parity/cost through the repro.accel API
 """
 from __future__ import annotations
 
@@ -17,13 +18,13 @@ import traceback
 
 
 def main() -> None:
-    from . import (fig7_sqnr, fig8_bandwidth, fig10_transfer, fig11_networks,
-                   kernels_bench)
+    from . import (accel_bench, fig7_sqnr, fig8_bandwidth, fig10_transfer,
+                   fig11_networks, kernels_bench)
 
     print("name,us_per_call,derived")
     failures = []
     for mod in (fig8_bandwidth, fig11_networks, fig10_transfer, fig7_sqnr,
-                kernels_bench):
+                kernels_bench, accel_bench):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BpbsConfig, CimuConfig, bpbs_matmul_int, cimu_matmul
+from repro import accel
+from repro.core import BpbsConfig, bpbs_matmul_int
 from repro.core import energy as E
 from repro.core.quant import Coding
 
@@ -44,20 +45,26 @@ def main():
     print("   max |chip - integer| =", float(jnp.abs(y - xs @ w).max()),
           "(200 non-zeros of 2304)")
 
-    print("=== 4. float API with STE gradients (drop-in matmul) ===")
+    print("=== 4. float API with STE gradients (repro.accel) ===")
     xf = jnp.asarray(rng.normal(size=(8, 512)), jnp.float32)
     wf = jnp.asarray(rng.normal(size=(512, 64)), jnp.float32)
     # bank-gate at 255 rows: each bank's range fits the ADC -> the only
-    # remaining error is the 4-b operand quantization itself
-    cfg = CimuConfig(mode="cimu", ba=6, bx=6, bank_n=255)
-    yf = cimu_matmul(xf, wf, cfg)
-    y_int = cimu_matmul(xf, wf, CimuConfig(mode="digital_int", ba=6, bx=6))
+    # remaining error is the 6-b operand quantization itself
+    spec = accel.ExecSpec(backend="bpbs", ba=6, bx=6, bank_n=255)
+    with accel.trace() as records:
+        yf = accel.matmul(xf, wf, spec)
+    with accel.override(backend="digital_int"):
+        y_int = accel.matmul(xf, wf, spec)     # same spec, ideal substrate
     rel = float(jnp.linalg.norm(yf - xf @ wf) / jnp.linalg.norm(xf @ wf))
     chip_vs_ideal = float(jnp.linalg.norm(yf - y_int) / jnp.linalg.norm(y_int))
-    g = jax.grad(lambda w: jnp.sum(cimu_matmul(xf, w, cfg) ** 2))(wf)
+    g = jax.grad(lambda w: jnp.sum(accel.matmul(xf, w, spec) ** 2))(wf)
+    print(f"   backends registered: {accel.list_backends()}")
     print(f"   rel err vs float = {rel:.3f} (= 6-b quantization); "
           f"chip vs bit-true ideal = {chip_vs_ideal:.2e}; grad finite = "
           f"{bool(jnp.isfinite(g).all())}")
+    es = accel.energy_summary(records, vdd=1.2)
+    print(f"   traced {len(records)} MVM(s): chip-model cost "
+          f"{es['total_pj']/1e3:.1f} nJ, {es['total_cycles']} cycles")
 
     print("=== 5. what the chip would spend on this MVM ===")
     shape = E.MvmShape(n=2304, m=64, ba=4, bx=4)

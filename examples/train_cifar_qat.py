@@ -42,9 +42,6 @@ def main():
                           weight_decay=0.0)
     opt = init_opt_state(params)
 
-    grad_fn = jax.jit(jax.value_and_grad(
-        lambda p, b: cnn_loss(p, b, net), has_aux=True))
-
     @jax.jit
     def update(params, opt, batch):
         (loss, m), grads = jax.value_and_grad(
@@ -65,15 +62,15 @@ def main():
     # --- Fig. 11 evaluation: chip model vs ideal bit-true vs float
     eval_batches = [make_batch(data_cfg, 10_000 + i) for i in range(5)]
 
-    def accuracy(mode):
+    def accuracy(backend):
         accs = []
         for b in eval_batches:
-            logits = cnn_forward(params, b["images"], net, mode=mode)
+            logits = cnn_forward(params, b["images"], net, backend=backend)
             accs.append(float(jnp.mean(
                 (jnp.argmax(logits, -1) == b["labels"]).astype(jnp.float32))))
         return sum(accs) / len(accs)
 
-    acc_chip = accuracy("cimu")
+    acc_chip = accuracy("bpbs")
     acc_ideal = accuracy("digital_int")
     acc_float = accuracy("digital")
     print(f"\naccuracy: chip-model={acc_chip:.3f}  "

@@ -1,11 +1,11 @@
 """End-to-end driver: train a ~100M-parameter LM for a few hundred steps
 through the full stack — config system, synthetic data pipeline with
 double-buffered prefetch, fault-tolerant trainer (async checkpoints,
-auto-resume), AdamW, optional BP/BS gradient compression and CIMU-mode
-(quantized in-memory-computing) matmuls.
+auto-resume), AdamW, optional BP/BS gradient compression and in-memory-
+computing matmuls via a repro.accel backend.
 
 Run:  PYTHONPATH=src python examples/train_lm.py --steps 200
-      [--arch olmo-1b] [--cimu] [--compress-bits 8] [--resume]
+      [--arch olmo-1b] [--accel bpbs] [--compress-bits 8] [--resume]
 """
 import argparse
 import dataclasses
@@ -48,20 +48,22 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--cimu", action="store_true",
-                    help="run every static-weight matmul through the CIMU")
+    ap.add_argument("--accel", default="",
+                    help="accel backend for every static-weight matmul "
+                         "(bpbs | digital_int | pallas; empty = digital)")
     ap.add_argument("--compress-bits", type=int, default=0,
                     help="BP/BS gradient compression (0 = off)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
     args = ap.parse_args()
 
     cfg = hundred_m_config(args.arch)
-    if args.cimu:
-        cfg = cfg.with_cimu(mode="cimu", ba=4, bx=4)
+    if args.accel:
+        cfg = cfg.with_accel(backend=args.accel, ba=4, bx=4)
 
     from repro.models.counting import param_count
     print(f"arch={cfg.name} family={cfg.family} "
-          f"params~{param_count(cfg)/1e6:.0f}M cimu={cfg.cimu.mode}")
+          f"params~{param_count(cfg)/1e6:.0f}M "
+          f"accel={cfg.policy.default.backend}")
 
     data_cfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
                           vocab=cfg.vocab, seed=0,

@@ -1,0 +1,55 @@
+"""``repro.accel`` — the unified execution-backend API.
+
+The paper's headline claim is *programmability*: one CIM macro serves many
+workloads by scaling matrix/input bit precision per layer (the BP/BS
+scheme), with the accelerator exposed to software as a first-class matmul
+target.  This package is that interface at framework scale:
+
+* :mod:`repro.accel.spec`     — :class:`ExecSpec`, the static description
+  of how one matmul executes (backend, B_A/B_X, coding, banking, ADC).
+* :mod:`repro.accel.registry` — named backend registry behind a common
+  ``matmul(x, w, spec, ctx)`` protocol; extensible via
+  :func:`register_backend`.
+* :mod:`repro.accel.backends` — the built-in substrates: ``digital``,
+  ``digital_int``, ``bpbs`` (fast path), ``bpbs_ref`` (cell physics),
+  ``pallas`` (TPU kernel).
+* :mod:`repro.accel.policy`   — :class:`PrecisionPolicy`: maps layer
+  paths / kinds / indices to an :class:`ExecSpec`, so a model can mirror
+  the paper's mixed 1-b/4-b deployments layer by layer.
+* :mod:`repro.accel.context`  — :class:`ExecContext` (PRNG for ADC
+  noise), the scoped :func:`override` for eval-parity runs, and the
+  :func:`trace` hook that feeds :mod:`repro.core.energy` from the same
+  spec the compute uses.
+* :mod:`repro.accel.dispatch` — :func:`matmul`, the single entry point
+  every weight-bearing projection in :mod:`repro.models` goes through.
+
+Quick start::
+
+    from repro import accel
+
+    spec = accel.ExecSpec(backend="bpbs", ba=4, bx=4)
+    y = accel.matmul(x, w, spec)                  # STE gradients
+
+    policy = accel.PrecisionPolicy(
+        rules=(("kind:mlp", accel.ExecSpec(backend="bpbs", ba=1, bx=1)),
+               ("path:unembed", accel.ExecSpec(backend="digital_int"))),
+        default=accel.ExecSpec(backend="bpbs", ba=4, bx=4))
+    spec = policy.resolve("mlp.down", kind="mlp")  # -> the 1-b rule
+
+    with accel.override(backend="digital_int"):   # eval-parity run
+        logits, _ = forward(params, tokens, cfg)
+"""
+from .context import (ExecContext, MvmRecord, adc_noise, energy_summary,
+                      override, trace, vmapped)
+from .dispatch import matmul
+from .policy import DIGITAL, PrecisionPolicy
+from .registry import get_backend, list_backends, register_backend
+from .spec import ExecSpec
+
+from . import backends as _backends  # noqa: F401  (registers built-ins)
+
+__all__ = [
+    "ExecSpec", "PrecisionPolicy", "DIGITAL", "ExecContext", "MvmRecord",
+    "matmul", "override", "trace", "vmapped", "adc_noise", "energy_summary",
+    "register_backend", "get_backend", "list_backends",
+]

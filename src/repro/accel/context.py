@@ -1,0 +1,193 @@
+"""Execution context, scoped overrides, and the energy trace hook.
+
+* :class:`ExecContext` carries per-call runtime state (the PRNG key for
+  ADC noise) into a backend.
+* :func:`override` is a context manager that rewrites every
+  policy-managed spec at dispatch time — the eval-parity recipe
+  (``with accel.override(backend="digital_int"): ...``) flips a whole
+  model between substrates without rebuilding configs.
+* :func:`trace` collects one :class:`MvmRecord` per dispatched matmul so
+  :mod:`repro.core.energy` and the roofline can be fed from the *same*
+  spec the compute used (no parallel bookkeeping to drift).
+
+Both :func:`override` and :func:`trace` act at JAX *trace* time: wrap the
+call that traces (the first call of a fresh ``jit``, or any eager call).
+A cached jit executable replays compiled code and neither re-dispatches
+nor re-records.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class ExecContext:
+    """Runtime state threaded into a backend call."""
+
+    key: Optional[jax.Array] = None     # PRNG key for ADC noise sampling
+
+
+# ------------------------------------------------------------- overrides
+
+_OVERRIDE_STACK: list[dict] = []
+
+
+@contextlib.contextmanager
+def override(**spec_kw) -> Iterator[None]:
+    """Scoped spec rewrite applied to every policy-managed dispatch.
+
+    Any :class:`~repro.accel.spec.ExecSpec` field can be overridden, most
+    usefully ``backend`` (eval parity), ``ba``/``bx`` (precision sweeps)
+    or ``ideal_adc`` (isolate operand quantization from ADC effects).
+    Nested overrides compose; inner wins per field.  Calls that pass
+    ``spec=None`` (projections that are digital *by design*, e.g. MoE
+    routers) are never rewritten.
+    """
+    from .spec import ExecSpec
+
+    fields = {f.name for f in dataclasses.fields(ExecSpec)}
+    unknown = set(spec_kw) - fields
+    if unknown:
+        raise TypeError(
+            f"override(): unknown ExecSpec field(s) {sorted(unknown)}; "
+            f"valid: {sorted(fields)}")
+    _OVERRIDE_STACK.append(dict(spec_kw))
+    try:
+        yield
+    finally:
+        _OVERRIDE_STACK.pop()
+
+
+def current_override() -> dict:
+    """The merged override in effect (inner scopes win)."""
+    merged: dict = {}
+    for frame in _OVERRIDE_STACK:
+        merged.update(frame)
+    return merged
+
+
+# ----------------------------------------------------------- energy trace
+
+@dataclasses.dataclass(frozen=True)
+class MvmRecord:
+    """One dispatched MVM: the resolved spec plus its static shape."""
+
+    tag: str          # the layer path the policy resolved (spec.tag)
+    backend: str
+    n: int            # contraction dim (input vector length)
+    m: int            # output dim
+    ba: int
+    bx: int
+    calls: int        # number of row-vector MVMs (prod of leading dims)
+
+
+_TRACE_STACK: list[list] = []
+_CALL_SCALE_STACK: list[int] = []
+
+
+@contextlib.contextmanager
+def trace() -> Iterator[list]:
+    """Collect an :class:`MvmRecord` per dispatched matmul in this scope."""
+    buf: list = []
+    _TRACE_STACK.append(buf)
+    try:
+        yield buf
+    finally:
+        _TRACE_STACK.pop()
+
+
+@contextlib.contextmanager
+def vmapped(n: int) -> Iterator[None]:
+    """Scale recorded call counts by ``n`` for dispatches whose mapped
+    axis is invisible to the dispatcher's ``x.shape``.
+
+    ``jax.vmap`` and ``jax.lax.scan`` trace their body ONCE, so a caller
+    that maps over e.g. MoE experts or scanned transformer layers must
+    wrap the mapped call in ``with accel.vmapped(n):`` for the energy
+    trace to count every instance's MVMs (the model zoo does this for
+    its expert vmaps and layer scans).  Nested scopes multiply.
+    """
+    _CALL_SCALE_STACK.append(int(n))
+    try:
+        yield
+    finally:
+        _CALL_SCALE_STACK.pop()
+
+
+def record(rec: MvmRecord) -> None:
+    if not _TRACE_STACK:
+        return
+    for n in _CALL_SCALE_STACK:
+        rec = dataclasses.replace(rec, calls=rec.calls * n)
+    for buf in _TRACE_STACK:
+        buf.append(rec)
+
+
+# ------------------------------------------------------------- ADC noise
+
+_NOISE_STACK: list[list] = []      # frames of [key, counter]
+
+
+@contextlib.contextmanager
+def adc_noise(key: jax.Array) -> Iterator[None]:
+    """Scoped PRNG source for ADC noise sampling (``adc_sigma_lsb > 0``).
+
+    Without a key the analog non-ideality model is deterministic-off
+    (``adc_quantize_sum`` skips the noise draw), so specs with
+    ``adc_sigma_lsb > 0`` need ``with accel.adc_noise(jax.random.PRNGKey
+    (0)): ...`` around the (tracing) call.  Each dispatched matmul folds
+    a fresh counter into the key, decorrelating noise across layers.
+    """
+    _NOISE_STACK.append([key, 0])
+    try:
+        yield
+    finally:
+        _NOISE_STACK.pop()
+
+
+def next_noise_key() -> Optional[jax.Array]:
+    """A fresh per-dispatch key from the innermost adc_noise scope."""
+    if not _NOISE_STACK:
+        return None
+    frame = _NOISE_STACK[-1]
+    frame[1] += 1
+    return jax.random.fold_in(frame[0], frame[1])
+
+
+def tracing() -> bool:
+    return bool(_TRACE_STACK)
+
+
+def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
+                   readout: str = "adc") -> dict:
+    """Chip-model cost of a traced run, from :mod:`repro.core.energy`.
+
+    Digital records are counted (``mvms``) but carry no accelerator
+    energy — they never touched the CIMU.  Returns totals plus a per-tag
+    breakdown (energy in pJ, CIMU cycles).
+    """
+    from repro.core import energy as E
+
+    by_tag: dict[str, dict] = {}
+    total_pj = 0.0
+    total_cycles = 0
+    for r in records:
+        row = by_tag.setdefault(
+            r.tag or r.backend,
+            {"backend": r.backend, "mvms": 0, "pj": 0.0, "cycles": 0})
+        row["mvms"] += r.calls
+        if r.backend == "digital":
+            continue
+        shape = E.MvmShape(n=r.n, m=r.m, ba=r.ba, bx=r.bx)
+        pj = E.mvm_energy_pj(shape, vdd, sparsity, readout)["total"] * r.calls
+        cyc = E.mvm_cycles(shape, readout) * r.calls
+        row["pj"] += pj
+        row["cycles"] += cyc
+        total_pj += pj
+        total_cycles += cyc
+    return {"total_pj": total_pj, "total_cycles": total_cycles,
+            "by_tag": by_tag}

@@ -1,0 +1,89 @@
+"""The single matmul entry point every managed projection goes through.
+
+``matmul`` resolves the effective spec (applying any scoped
+:func:`~repro.accel.context.override`), records the MVM for energy/
+roofline tracing, and dispatches to the registered backend.  Non-digital
+backends get straight-through-estimator (STE) gradients — the backward
+pass is that of the plain float GEMM, which is what quantization-aware
+training of the paper's CIFAR networks uses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .context import (ExecContext, MvmRecord, current_override,
+                      next_noise_key, record, tracing)
+from .registry import get_backend
+from .spec import ExecSpec
+
+
+def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array) -> None:
+    if not tracing():
+        return
+    record(MvmRecord(
+        tag=spec.tag, backend=spec.backend,
+        n=int(w.shape[0]), m=int(w.shape[1]),
+        ba=spec.ba, bx=spec.bx,
+        calls=int(math.prod(x.shape[:-1])),
+    ))
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    spec: Optional[ExecSpec] = None,
+    ctx: Optional[ExecContext] = None,
+    *,
+    dtype=None,
+) -> jax.Array:
+    """``x @ w`` under ``spec``'s execution backend.
+
+    * ``spec=None`` means *digital by design* (dynamic operands, routers,
+      recurrence gates): always a plain GEMM, exempt from overrides and
+      tracing.
+    * A digital spec computes at ``dtype`` (default: ``x.dtype``) and
+      returns that dtype.
+    * Any other backend quantizes per its spec, computes in float32 with
+      STE gradients, and returns float32 — callers cast.
+    """
+    if spec is None:
+        dt = dtype or x.dtype
+        return jnp.einsum("...n,nm->...m", x.astype(dt), w.astype(dt))
+
+    ov = current_override()
+    if ov:
+        spec = dataclasses.replace(spec, **ov)
+    _record_mvm(spec, x, w)
+
+    fn = get_backend(spec.backend)
+    if ctx is None:
+        ctx = ExecContext(key=next_noise_key())
+    if spec.is_digital:
+        # digital computes at the caller's dtype and takes no STE wrapper,
+        # but still goes through the registry so a re-registered "digital"
+        # backend governs this path too
+        dt = dtype or x.dtype
+        return fn(x.astype(dt), w.astype(dt), spec, ctx)
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+
+    @jax.custom_vjp
+    def _op(x, w):
+        return fn(x, w, spec, ctx)
+
+    def _fwd(x, w):
+        return _op(x, w), (x, w)
+
+    def _bwd(res, g):
+        x, w = res
+        dx = jnp.einsum("...m,nm->...n", g, w)
+        dw = jnp.einsum("...n,...m->nm", x, g)
+        return dx, dw
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(xf, wf)

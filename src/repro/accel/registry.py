@@ -1,0 +1,55 @@
+"""Named execution-backend registry.
+
+A backend is any callable implementing the protocol::
+
+    fn(x: f32[..., N], w: f32[N, M], spec: ExecSpec, ctx: ExecContext)
+        -> f32[..., M]
+
+Backends own their numerics end to end (quantize -> compute -> rescale);
+the dispatcher (:mod:`repro.accel.dispatch`) owns casting, STE gradients,
+overrides, and trace recording, so a registered backend stays a pure
+forward function.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+BackendFn = Callable[..., object]
+
+# the names repro.accel.backends registers at import; ExecSpec validation
+# accepts these even before that import side effect has run
+BUILTIN_BACKENDS = ("digital", "digital_int", "bpbs", "bpbs_ref", "pallas")
+
+_BACKENDS: dict[str, BackendFn] = {}
+
+
+def known_backend(name: str) -> bool:
+    return name in _BACKENDS or name in BUILTIN_BACKENDS
+
+
+def register_backend(name: str, fn: Optional[BackendFn] = None):
+    """Register ``fn`` under ``name``; usable as a decorator.
+
+    Re-registering a name replaces the previous backend (useful for tests
+    and for swapping a faithful model for a faster approximation).
+    """
+    def _register(f: BackendFn) -> BackendFn:
+        _BACKENDS[name] = f
+        return f
+
+    if fn is not None:
+        return _register(fn)
+    return _register
+
+
+def get_backend(name: str) -> BackendFn:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown accel backend {name!r}; registered: {list_backends()}"
+        ) from None
+
+
+def list_backends() -> list[str]:
+    return sorted(_BACKENDS)

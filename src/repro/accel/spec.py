@@ -1,0 +1,80 @@
+"""ExecSpec: the static description of how one matmul executes.
+
+An ``ExecSpec`` replaces the old ``CimuConfig`` mode/use_kernel/interpret
+flag tangle with a single ``backend`` name resolved through
+:mod:`repro.accel.registry`, plus the BP/BS precision knobs the paper
+scales per layer (B_A, B_X, coding, banking, ADC model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.bpbs import BpbsConfig
+from repro.core.quant import Coding
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Hashable execution spec attached to a projection (or a policy rule).
+
+    ``backend`` names a registered execution substrate:
+
+    * ``digital``      — plain float GEMM at the caller's compute dtype
+                         (the paper's "not in-memory computing" baseline).
+    * ``digital_int``  — bit-true integer compute at (B_A, B_X): the
+                         paper's *ideal* reference (Fig. 11 "vs. ideal").
+    * ``bpbs``         — mixed-signal BP/BS pipeline, fast GEMM-identity
+                         path (:mod:`repro.core.bpbs`).
+    * ``bpbs_ref``     — cell-by-cell charge-share physics
+                         (:mod:`repro.core.cima`); slow, tests/validation.
+    * ``pallas``       — the Pallas TPU kernel
+                         (:mod:`repro.kernels.cima_mvm`).
+    """
+
+    backend: str = "digital"
+    ba: int = 4                    # matrix-element bits (parallel columns)
+    bx: int = 4                    # input-element bits (serial steps)
+    coding: Coding = Coding.XNOR
+    bank_n: int = 2304             # rows per charge-share/ADC boundary
+    adc_bits: int = 8
+    adc_sigma_lsb: float = 0.0     # analog non-ideality (Fig. 10), LSB units
+    adaptive_range: bool = False   # ADC full-scale tracks unmasked rows
+    ideal_adc: bool = False        # bypass the ADC (bit-true integer compute)
+    per_channel: bool = True       # per-output-column weight scales
+    interpret: Optional[bool] = None  # pallas interpret mode (None = auto)
+    tag: str = ""                  # provenance: the path a policy resolved
+
+    def __post_init__(self):
+        object.__setattr__(self, "coding", Coding(self.coding))
+        from .registry import known_backend
+
+        # fail at construction (the config boundary), not at the first
+        # forward pass deep inside a training run
+        if not known_backend(self.backend):
+            from .registry import list_backends
+
+            raise ValueError(
+                f"unknown accel backend {self.backend!r}; registered: "
+                f"{list_backends()} — custom backends must be registered "
+                "with repro.accel.register_backend before building specs")
+
+    @property
+    def is_digital(self) -> bool:
+        return self.backend == "digital"
+
+    def bpbs(self) -> BpbsConfig:
+        """The core BP/BS config this spec describes."""
+        return BpbsConfig(
+            ba=self.ba,
+            bx=self.bx,
+            coding=self.coding,
+            bank_n=self.bank_n,
+            adc_bits=self.adc_bits,
+            adc_sigma_lsb=self.adc_sigma_lsb,
+            adaptive_range=self.adaptive_range,
+            ideal_adc=self.ideal_adc,
+        )
+
+    def with_(self, **kw) -> "ExecSpec":
+        return dataclasses.replace(self, **kw)

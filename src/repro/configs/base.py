@@ -9,7 +9,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core.cimu import CimuConfig
+from repro.accel import ExecSpec, PrecisionPolicy
 
 _REGISTRY: dict[str, "ArchConfig"] = {}
 
@@ -73,8 +73,11 @@ class ArchConfig:
     frontend: str = "none"           # none | vision | audio
     frontend_seq: int = 0            # stub frontend sequence length
 
-    # paper technique
-    cimu: CimuConfig = dataclasses.field(default_factory=CimuConfig)
+    # paper technique: per-layer execution-backend policy (repro.accel).
+    # Default = all-digital; with_accel()/with_policy() route the
+    # static-weight projections through a CIM backend.
+    policy: PrecisionPolicy = dataclasses.field(
+        default_factory=PrecisionPolicy)
 
     # runtime
     dtype: str = "bfloat16"
@@ -108,8 +111,18 @@ class ArchConfig:
                     + ("moe",) * (self.n_layers - self.first_k_dense))
         return ("attn",) * self.n_layers
 
-    def with_cimu(self, **kw) -> "ArchConfig":
-        return dataclasses.replace(self, cimu=dataclasses.replace(self.cimu, **kw))
+    def with_accel(self, backend: str = "bpbs", rules=(),
+                   **spec_kw) -> "ArchConfig":
+        """Uniform execution spec for every managed projection, plus
+        optional per-layer ``(pattern, ExecSpec)`` rules on top — e.g.
+        ``cfg.with_accel("bpbs", ba=4, bx=4,
+        rules=(("path:unembed", ExecSpec(backend="digital")),))``."""
+        policy = PrecisionPolicy(rules=tuple(rules),
+                                 default=ExecSpec(backend=backend, **spec_kw))
+        return dataclasses.replace(self, policy=policy)
+
+    def with_policy(self, policy: PrecisionPolicy) -> "ArchConfig":
+        return dataclasses.replace(self, policy=policy)
 
     def reduced(self) -> "ArchConfig":
         """Tiny same-family config for CPU smoke tests."""

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.cimu import CimuConfig
+from repro.accel import ExecSpec, PrecisionPolicy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,7 +27,7 @@ class CnnConfig:
     ba: int
     bx: int
     readout: str          # adc | abn
-    cimu: CimuConfig
+    policy: PrecisionPolicy
     image_hw: int = 32
     n_classes: int = 10
 
@@ -63,7 +63,7 @@ NETWORK_A = CnnConfig(
         CnnLayer("fc", 1024, 10),
     ),
     ba=4, bx=4, readout="adc",
-    cimu=CimuConfig(mode="cimu", ba=4, bx=4),
+    policy=PrecisionPolicy.uniform(ExecSpec(backend="bpbs", ba=4, bx=4)),
 )
 
 NETWORK_B = CnnConfig(
@@ -76,5 +76,5 @@ NETWORK_B = CnnConfig(
         CnnLayer("fc", 1024, 10),
     ),
     ba=1, bx=1, readout="abn",
-    cimu=CimuConfig(mode="cimu", ba=1, bx=1),
+    policy=PrecisionPolicy.uniform(ExecSpec(backend="bpbs", ba=1, bx=1)),
 )

@@ -2,21 +2,32 @@
 
 Modules mirror the chip's block diagram (paper Figs. 1, 2):
 
-* :mod:`repro.core.quant`    — BP/BS bit-plane codings (XNOR / AND).
-* :mod:`repro.core.cima`     — charge-domain column physics model.
-* :mod:`repro.core.adc`      — 8-b SAR ADC and binarizing ABN.
-* :mod:`repro.core.bpbs`     — bit-parallel/bit-serial multi-bit MVM.
-* :mod:`repro.core.sparsity` — Sparsity/AND-logic Controller.
-* :mod:`repro.core.datapath` — near-memory digital post-reduce pipeline.
-* :mod:`repro.core.cimu`     — user-facing CIMU matmul (+ STE training).
-* :mod:`repro.core.energy`   — measured pJ/cycle/bandwidth cost model.
+* :mod:`repro.core.quant`    — BP/BS bit-plane codings (XNOR / AND),
+  symmetric per-tensor/per-channel quantization onto the coding grids.
+* :mod:`repro.core.cima`     — charge-domain column physics model
+  (cell-by-cell popcounts; the slow oracle).
+* :mod:`repro.core.adc`      — 8-b SAR ADC and binarizing ABN readout.
+* :mod:`repro.core.bpbs`     — bit-parallel/bit-serial multi-bit MVM:
+  the fast GEMM-identity path and the physics reference, banked at the
+  charge-share/ADC boundary.
+* :mod:`repro.core.sparsity` — Sparsity/AND-logic Controller (element
+  masks, adaptive ADC range).
+* :mod:`repro.core.datapath` — near-memory digital post-reduce pipeline
+  (barrel shift, scale/bias, output-width selection).
+* :mod:`repro.core.energy`   — measured pJ/cycle/bandwidth cost model
+  (Summary table, Figs. 8/11 reproductions).
 * :mod:`repro.core.sqnr`     — Fig. 7 SQNR analysis.
+
+The user-facing matmul lives one level up in :mod:`repro.accel`: a
+backend registry (``digital`` / ``digital_int`` / ``bpbs`` / ``bpbs_ref``
+/ ``pallas``) behind ``accel.matmul(x, w, spec, ctx)``, with
+:class:`repro.accel.PrecisionPolicy` mapping model layers to per-layer
+``ExecSpec``s — see the top-level README.
 """
 from .bpbs import BpbsConfig, bpbs_matmul_int
-from .cimu import CimuConfig, cimu_matmul
 from .quant import Coding, quantize, int_to_planes, planes_to_int, plane_weights
 
 __all__ = [
-    "BpbsConfig", "bpbs_matmul_int", "CimuConfig", "cimu_matmul",
+    "BpbsConfig", "bpbs_matmul_int",
     "Coding", "quantize", "int_to_planes", "planes_to_int", "plane_weights",
 ]

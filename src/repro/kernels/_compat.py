@@ -1,0 +1,8 @@
+"""Version compatibility for the Pallas TPU API surface."""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+# renamed across jax versions (TPUCompilerParams -> CompilerParams)
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

@@ -33,9 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
 
 from repro.core.bpbs import BpbsConfig
+from repro.kernels import _compat
 from repro.core.quant import Coding
 
 
@@ -143,7 +143,7 @@ def cima_mvm_planes(
         ],
         out_specs=pl.BlockSpec((block_b, block_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -91,7 +91,7 @@ def tree_arg_bytes(structs, shardings) -> int:
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             cimu_mode: str = "digital", out_dir: str = "artifacts/dryrun",
+             backend: str = "digital", out_dir: str = "artifacts/dryrun",
              extra_tag: str = "", opts: str = "") -> dict:
     import jax
     import jax.numpy as jnp
@@ -110,11 +110,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     tag = f"{arch}__{shape_name}__{mesh_tag}" + \
         (f"__{extra_tag}" if extra_tag else "")
     record = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
-              "cimu_mode": cimu_mode, "tag": extra_tag}
+              "backend": backend, "tag": extra_tag}
 
     cfg = get_config(arch)
-    if cimu_mode != "digital":
-        cfg = cfg.with_cimu(mode=cimu_mode)
+    if backend != "digital":
+        # route every managed projection through the named accel backend
+        cfg = cfg.with_accel(backend=backend)
     # §Perf hillclimb knobs: "--opt attn_scan_remat=1,onehot_embed=1,mb=4"
     mb_override = None
     if opts:
@@ -291,7 +292,9 @@ def main():
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--multi-pod", default="no", choices=["no", "yes", "both"])
-    ap.add_argument("--cimu", default="digital")
+    ap.add_argument("--backend", default="digital",
+                    help="accel backend for every managed projection "
+                         "(digital | digital_int | bpbs | pallas)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--tag", default="")
@@ -314,7 +317,7 @@ def main():
                     continue
                 cmd = [sys.executable, "-m", "repro.launch.dryrun",
                        "--arch", arch, "--shape", shape_name,
-                       "--multi-pod", mp, "--cimu", args.cimu,
+                       "--multi-pod", mp, "--backend", args.backend,
                        "--out", args.out]
                 r = subprocess.run(cmd)
                 if r.returncode != 0:
@@ -327,7 +330,7 @@ def main():
 
     try:
         run_cell(args.arch, args.shape, args.multi_pod == "yes",
-                 args.cimu, args.out, args.tag, args.opt)
+                 args.backend, args.out, args.tag, args.opt)
     except Exception:
         traceback.print_exc()
         mesh_tag = "pod2" if args.multi_pod == "yes" else "pod1"

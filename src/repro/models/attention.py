@@ -7,10 +7,12 @@ sharding rules apply uniformly across all assigned archs (whisper's 6
 heads, llama4's 40 heads: the fused dim is divisible by the model axis
 even when the head count is not).
 
-CIMU note (DESIGN.md §2): only the static-weight projections (q/k/v/o,
-MLA down/up) are CIMU-eligible; the score/value matmuls have two dynamic
-operands and stay digital, as on the chip (weights are stationary in the
-CIMA; reloading costs ~18k cycles).
+Accelerator note (DESIGN.md §2): only the static-weight projections
+(q/k/v/o, MLA down/up) resolve an ``ExecSpec`` from the arch policy
+(paths ``attn.q/k/v/o``, ``attn.dkv/krope/ukv``, ``cross.*``; kind
+``attn``); the score/value matmuls have two dynamic operands and stay
+digital by design, as on the chip (weights are stationary in the CIMA;
+reloading costs ~18k cycles).
 """
 from __future__ import annotations
 
@@ -231,12 +233,12 @@ def attention(params, x, cfg, positions, cache: Optional[KVCache] = None,
     decode updating ``cache`` at ``cache_pos``.  Returns (out, new_cache)."""
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-    q = cs(linear(params["wq"], x, cimu, dtype).reshape(b, s, h, hd),
+    sp = cfg.policy.resolver("attn")
+    q = cs(linear(params["wq"], x, sp("attn.q"), dtype).reshape(b, s, h, hd),
            ("dp", None, ["tp"], ["tp"]))
-    k = cs(linear(params["wk"], x, cimu, dtype).reshape(b, s, kv, hd),
+    k = cs(linear(params["wk"], x, sp("attn.k"), dtype).reshape(b, s, kv, hd),
            ("dp", None, ["tp"], ["tp"]))
-    v = cs(linear(params["wv"], x, cimu, dtype).reshape(b, s, kv, hd),
+    v = cs(linear(params["wv"], x, sp("attn.v"), dtype).reshape(b, s, kv, hd),
            ("dp", None, ["tp"], ["tp"]))
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
@@ -272,7 +274,7 @@ def attention(params, x, cfg, positions, cache: Optional[KVCache] = None,
         kv_pos = ring_slot_positions(length, cache_pos)
         o = sdpa(q, ck, cv, causal=True, window=cfg.attn_window,
                  q_offset=cache_pos, dtype=dtype, kv_positions=kv_pos)
-    out = linear(params["wo"], o.reshape(b, s, h * hd), cimu, dtype)
+    out = linear(params["wo"], o.reshape(b, s, h * hd), sp("attn.o"), dtype)
     return out, new_cache
 
 
@@ -311,16 +313,18 @@ def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
     b, s, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    sp = cfg.policy.resolver("attn")
 
-    q = cs(linear(params["wq"], x, cimu, dtype).reshape(b, s, h, dn + dr),
+    q = cs(linear(params["wq"], x, sp("attn.q"), dtype
+                  ).reshape(b, s, h, dn + dr),
            ("dp", None, ["tp"], None))
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    c_kv = linear(params["w_dkv"], x, cimu, dtype)               # [B,S,r]
-    k_rope = linear(params["w_krope"], x, cimu, dtype)[:, :, None, :]
+    c_kv = linear(params["w_dkv"], x, sp("attn.dkv"), dtype)     # [B,S,r]
+    k_rope = linear(params["w_krope"], x, sp("attn.krope"),
+                    dtype)[:, :, None, :]
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)       # [B,S,1,dr]
 
     if cache_pos is None:
@@ -340,7 +344,7 @@ def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
         new_cache = MLACache(cc, cr)
         full_c, full_rope, q_off = cc, cr[:, :, None, :], cache_pos
 
-    kvu = linear(params["w_ukv"], full_c, cimu, dtype)
+    kvu = linear(params["w_ukv"], full_c, sp("attn.ukv"), dtype)
     kvu = cs(kvu.reshape(b, full_c.shape[1], h, dn + dv),
              ("dp", None, ["tp"], None))
     k_nope, v = kvu[..., :dn], kvu[..., dn:]
@@ -350,7 +354,7 @@ def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
     o = sdpa(q, k, v, causal=True, q_offset=q_off,
              scale=(dn + dr) ** -0.5, dtype=dtype,
              scan_remat=cfg.attn_scan_remat, bf16_probs=cfg.attn_bf16_probs)
-    out = linear(params["wo"], o.reshape(b, s, h * dv), cimu, dtype)
+    out = linear(params["wo"], o.reshape(b, s, h * dv), sp("attn.o"), dtype)
     return out, new_cache
 
 
@@ -364,17 +368,19 @@ def cross_attention(params, x, enc_kv, cfg, dtype=jnp.bfloat16):
     """Decoder->encoder attention (whisper); enc_kv = (k, v) precomputed."""
     b, s, _ = x.shape
     h, hd = cfg.n_heads, cfg.hd
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-    q = linear(params["wq"], x, cimu, dtype).reshape(b, s, h, hd)
+    sp = cfg.policy.resolver("attn")
+    q = linear(params["wq"], x, sp("cross.q"), dtype).reshape(b, s, h, hd)
     k, v = enc_kv
     o = sdpa(q, k, v, causal=False, dtype=dtype)
-    return linear(params["wo"], o.reshape(b, s, h * hd), cimu, dtype)
+    return linear(params["wo"], o.reshape(b, s, h * hd), sp("cross.o"), dtype)
 
 
 def encode_cross_kv(params, enc_out, cfg, dtype=jnp.bfloat16):
     b, s, _ = enc_out.shape
     kv, hd = cfg.n_kv_heads, cfg.hd
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-    k = linear(params["wk"], enc_out, cimu, dtype).reshape(b, s, kv, hd)
-    v = linear(params["wv"], enc_out, cimu, dtype).reshape(b, s, kv, hd)
+    sp = cfg.policy.resolver("attn")
+    k = linear(params["wk"], enc_out, sp("cross.k"), dtype
+               ).reshape(b, s, kv, hd)
+    v = linear(params["wv"], enc_out, sp("cross.v"), dtype
+               ).reshape(b, s, kv, hd)
     return k, v

@@ -6,13 +6,14 @@ scale/bias; Network B's binary activations are the ABN comparator.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro import accel
 from repro.configs.cifar_nets import CnnConfig
-from repro.core.cimu import cimu_matmul
 from repro.optim.qat import ste_sign
 
 from .layers import truncated_normal_init
@@ -51,43 +52,42 @@ def _batchnorm(y, scale, bias, eps=1e-5):
 
 
 def cnn_forward(params, images, net: CnnConfig,
-                mode: Optional[str] = None) -> jax.Array:
+                backend: Optional[str] = None) -> jax.Array:
     """images: [B, 32, 32, 3] -> logits [B, 10].
 
-    ``mode`` overrides net.cimu.mode (digital / digital_int / cimu) so the
-    same parameters can be evaluated under the ideal and the chip model —
-    the Fig. 11 accuracy comparison."""
-    import dataclasses
-
-    cimu = net.cimu if mode is None else dataclasses.replace(net.cimu,
-                                                             mode=mode)
+    ``backend`` (digital / digital_int / bpbs / ...) runs the whole net
+    under :func:`repro.accel.override` so the same parameters can be
+    evaluated under the ideal and the chip model — the Fig. 11 accuracy
+    comparison.  Layer-index policy rules apply here: the CNN loop is
+    unrolled, so each layer resolves with its static index."""
+    ov = (accel.override(backend=backend) if backend is not None
+          else contextlib.nullcontext())
     x = images
     n_layers = len(net.layers)
-    for i, (layer, p) in enumerate(zip(net.layers, params["layers"])):
-        if layer.kind == "conv":
-            h = _im2col(x)                               # [B,H,W,9*Cin]
-        else:
-            h = x.reshape(x.shape[0], -1)                # flatten
-        if cimu.mode == "digital":
-            y = h @ p["w"]
-        else:
-            y = cimu_matmul(h.astype(jnp.float32), p["w"], cimu)
-        y = _batchnorm(y, p["bn_scale"], p["bn_bias"])   # datapath scale/bias
-        last = i == n_layers - 1
-        if not last:
-            if net.readout == "abn":
-                y = ste_sign(y)                          # ABN comparator
+    with ov:
+        for i, (layer, p) in enumerate(zip(net.layers, params["layers"])):
+            if layer.kind == "conv":
+                h = _im2col(x)                           # [B,H,W,9*Cin]
             else:
-                y = jax.nn.relu(y)
-        if layer.kind == "conv" and layer.pool:
-            b, hh, ww, c = y.shape
-            y = y.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
-        x = y
+                h = x.reshape(x.shape[0], -1)            # flatten
+            spec = net.policy.resolve(f"layer{i}", kind=layer.kind, layer=i)
+            y = accel.matmul(h, p["w"], spec, dtype=jnp.float32)
+            y = _batchnorm(y, p["bn_scale"], p["bn_bias"])  # datapath s/b
+            last = i == n_layers - 1
+            if not last:
+                if net.readout == "abn":
+                    y = ste_sign(y)                      # ABN comparator
+                else:
+                    y = jax.nn.relu(y)
+            if layer.kind == "conv" and layer.pool:
+                b, hh, ww, c = y.shape
+                y = y.reshape(b, hh // 2, 2, ww // 2, 2, c).max(axis=(2, 4))
+            x = y
     return x
 
 
-def cnn_loss(params, batch, net: CnnConfig, mode: Optional[str] = None):
-    logits = cnn_forward(params, batch["images"], net, mode)
+def cnn_loss(params, batch, net: CnnConfig, backend: Optional[str] = None):
+    logits = cnn_forward(params, batch["images"], net, backend)
     labels = batch["labels"]
     logz = jax.nn.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]

@@ -1,10 +1,13 @@
 """Foundational model layers.
 
-Every weight-bearing projection goes through :func:`linear`, which routes
-to the CIMU (the paper's accelerator) when the arch config enables it —
-this is how the paper's technique is a first-class feature of the
-framework rather than a bolt-on.  Master parameters are float32; digital
-compute casts to the configured activation dtype.
+Every weight-bearing projection goes through :func:`linear`, which
+dispatches via :func:`repro.accel.matmul` under the ``ExecSpec`` its
+caller resolved from the arch config's :class:`PrecisionPolicy` — this is
+how the paper's technique is a first-class feature of the framework
+rather than a bolt-on.  ``spec=None`` marks projections that are digital
+*by design* (dynamic operands, routers, recurrence gates).  Master
+parameters are float32; digital compute casts to the configured
+activation dtype, quantized backends compute f32 with STE gradients.
 """
 from __future__ import annotations
 
@@ -13,7 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.cimu import CimuConfig, cimu_matmul
+from repro.accel import ExecSpec, matmul as accel_matmul
 
 
 def truncated_normal_init(key, shape, stddev):
@@ -30,14 +33,10 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False,
     return p
 
 
-def linear(params: dict, x: jax.Array, cimu: Optional[CimuConfig] = None,
+def linear(params: dict, x: jax.Array, spec: Optional[ExecSpec] = None,
            dtype=jnp.bfloat16) -> jax.Array:
-    """x @ w (+ b), through the CIMU when configured."""
-    w = params["w"]
-    if cimu is not None and cimu.mode != "digital":
-        y = cimu_matmul(x.astype(jnp.float32), w, cimu).astype(dtype)
-    else:
-        y = jnp.einsum("...n,nm->...m", x.astype(dtype), w.astype(dtype))
+    """x @ w (+ b), through the configured execution backend."""
+    y = accel_matmul(x, params["w"], spec, dtype=dtype).astype(dtype)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
@@ -85,14 +84,11 @@ def embed(params: dict, tokens: jax.Array, dtype=jnp.bfloat16,
     return params["table"].astype(dtype)[tokens]
 
 
-def unembed(params: dict, x: jax.Array, cimu: Optional[CimuConfig] = None,
+def unembed(params: dict, x: jax.Array, spec: Optional[ExecSpec] = None,
             dtype=jnp.bfloat16) -> jax.Array:
-    """LM head (tied): x @ table.T — a static-weight MVM, CIMU-eligible."""
+    """LM head (tied): x @ table.T — a static-weight MVM, CIM-eligible."""
     w = params["table"].T
-    if cimu is not None and cimu.mode != "digital":
-        return cimu_matmul(x.astype(jnp.float32), w, cimu).astype(jnp.float32)
-    return jnp.einsum("...d,dv->...v", x.astype(dtype), w.astype(dtype)
-                      ).astype(jnp.float32)
+    return accel_matmul(x, w, spec, dtype=dtype).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------- rotary
@@ -129,10 +125,10 @@ def init_mlp(key, cfg) -> dict:
 
 def mlp(params: dict, x: jax.Array, cfg, dtype=jnp.bfloat16) -> jax.Array:
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    sp = cfg.policy.resolver("mlp")
     if "gate" in params:
-        h = act(linear(params["gate"], x, cimu, dtype)) * \
-            linear(params["up"], x, cimu, dtype)
+        h = act(linear(params["gate"], x, sp("mlp.gate"), dtype)) * \
+            linear(params["up"], x, sp("mlp.up"), dtype)
     else:
-        h = act(linear(params["up"], x, cimu, dtype))
-    return linear(params["down"], h, cimu, dtype)
+        h = act(linear(params["up"], x, sp("mlp.up"), dtype))
+    return linear(params["down"], h, sp("mlp.down"), dtype)

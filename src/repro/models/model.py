@@ -105,25 +105,41 @@ def _decoder_with_cross(params, x, cfg, positions, cross_kv, cache,
         body = jax.checkpoint(body, prevent_cse=False)
     scanned = params["stack"]["scanned"]["u0"]
     cache_xs = cache["scanned"]["u0"] if cache is not None else None
-    if cache_xs is None:
-        x, ncs = jax.lax.scan(
-            lambda c, p: body(c, (p[0], p[1], p[2], None)),
-            x, (scanned, params["cross"], cross_kv))
-    else:
-        x, ncs = jax.lax.scan(
-            body, x, (scanned, params["cross"], cross_kv, cache_xs))
+    from repro.accel import vmapped
+
+    with vmapped(cfg.n_layers):     # scan traces one decoder layer body
+        if cache_xs is None:
+            x, ncs = jax.lax.scan(
+                lambda c, p: body(c, (p[0], p[1], p[2], None)),
+                x, (scanned, params["cross"], cross_kv))
+        else:
+            x, ncs = jax.lax.scan(
+                body, x, (scanned, params["cross"], cross_kv, cache_xs))
     new_cache = {"prefix": [], "scanned": {"u0": ncs}, "suffix": []} \
         if cache is not None else None
     return x, new_cache
 
 
 def _cross_kv_all_layers(params, enc_out, cfg, dtype):
-    return jax.vmap(
-        lambda pc: attn_mod.encode_cross_kv(pc["attn"], enc_out, cfg, dtype)
-    )(params["cross"])
+    from repro.accel import vmapped
+
+    with vmapped(cfg.n_layers):     # vmap over per-layer cross-attn params
+        return jax.vmap(
+            lambda pc: attn_mod.encode_cross_kv(pc["attn"], enc_out, cfg,
+                                                dtype)
+        )(params["cross"])
 
 
 # ---------------------------------------------------------------- forward
+
+def _lm_logits(params, x, cfg, dtype):
+    """Final projection to vocab — a static-weight MVM (policy path
+    ``unembed``), tied or untied."""
+    spec = cfg.policy.resolve("unembed", kind="unembed")
+    if cfg.tie_embeddings:
+        return unembed(params["embed"], x, spec, dtype)
+    return linear(params["lm_head"], x, spec, dtype).astype(jnp.float32)
+
 
 def forward(params, tokens, cfg, frontend_embeds=None, positions=None):
     """Full-sequence logits [B, S, vocab] (training / teacher forcing)."""
@@ -148,11 +164,7 @@ def forward(params, tokens, cfg, frontend_embeds=None, positions=None):
         x, _, aux = tfm.apply_stack(params["stack"], x, cfg, positions,
                                     dtype=dtype)
     x = norm(params["final_norm"], x, cfg.norm)
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-    if cfg.tie_embeddings:
-        logits = unembed(params["embed"], x, cimu, dtype)
-    else:
-        logits = linear(params["lm_head"], x, cimu, dtype).astype(jnp.float32)
+    logits = _lm_logits(params, x, cfg, dtype)
     return logits, aux
 
 
@@ -223,11 +235,7 @@ def prefill(params, tokens, cfg, s_max: Optional[int] = None,
         x, layers, _ = tfm.apply_stack(params["stack"], x, cfg, positions,
                                        cache.layers, dtype=dtype)
     x = norm(params["final_norm"], x[:, -1:], cfg.norm)
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-    if cfg.tie_embeddings:
-        logits = unembed(params["embed"], x, cimu, dtype)
-    else:
-        logits = linear(params["lm_head"], x, cimu, dtype).astype(jnp.float32)
+    logits = _lm_logits(params, x, cfg, dtype)
     return logits[:, 0], DecodeCache(layers, jnp.asarray(s, jnp.int32),
                                      cross_kv)
 
@@ -252,9 +260,5 @@ def decode_step(params, token, cache: DecodeCache, cfg):
                                        cache.layers, cache_pos=pos,
                                        dtype=dtype)
     x = norm(params["final_norm"], x, cfg.norm)
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-    if cfg.tie_embeddings:
-        logits = unembed(params["embed"], x, cimu, dtype)
-    else:
-        logits = linear(params["lm_head"], x, cimu, dtype).astype(jnp.float32)
+    logits = _lm_logits(params, x, cfg, dtype)
     return logits[:, 0], DecodeCache(layers, pos + 1, cache.cross_kv)

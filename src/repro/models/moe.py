@@ -82,24 +82,27 @@ def moe_ffn(params, x, cfg, dtype=jnp.bfloat16):
     # inserts the all-to-all at this boundary
     xe = cs(buf[:-1].reshape(e, capacity, d), ("tp", None, None))
 
-    # ---- expert compute, batched over the (sharded) expert dim
+    # ---- expert compute, batched over the (sharded) expert dim.  Expert
+    # FFN weights are stationary MVM matrices -> accelerator-eligible;
+    # vmap over experts keeps each expert's quantization scales private.
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    if cfg.cimu.mode != "digital":
-        # expert FFN weights are stationary MVM matrices -> CIMU-eligible
-        from repro.core.cimu import cimu_matmul
+    from repro.accel import matmul as accel_matmul
 
-        def expert(xe_e, wg, wu, wd):
-            ge = cimu_matmul(xe_e.astype(jnp.float32), wg, cfg.cimu)
-            ue = cimu_matmul(xe_e.astype(jnp.float32), wu, cfg.cimu)
-            return cimu_matmul(act(ge) * ue, wd, cfg.cimu).astype(dtype)
+    sp = cfg.policy.resolver("moe")
+    sp_g, sp_u, sp_d = sp("moe.gate"), sp("moe.up"), sp("moe.down")
 
+    def expert(xe_e, wg, wu, wd):
+        ge = accel_matmul(xe_e, wg, sp_g, dtype=dtype)
+        ue = accel_matmul(xe_e, wu, sp_u, dtype=dtype)
+        return accel_matmul(act(ge) * ue, wd, sp_d, dtype=dtype).astype(dtype)
+
+    # the vmapped expert axis is invisible to the dispatcher's shape-based
+    # call counting; scale the energy-trace records by e
+    from repro.accel import vmapped
+
+    with vmapped(e):
         ye = jax.vmap(expert)(xe, params["w_gate"], params["w_up"],
                               params["w_down"])
-    else:
-        g = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(dtype))
-        u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(dtype))
-        ye = jnp.einsum("ecf,efd->ecd", act(g) * u,
-                        params["w_down"].astype(dtype))
 
     ye = cs(ye, ("tp", None, None))
     # ---- combine: gather each kept assignment back to its token
@@ -110,10 +113,9 @@ def moe_ffn(params, x, cfg, dtype=jnp.bfloat16):
     y = jnp.zeros((t, d), dtype).at[st_].add(contrib)
 
     if "shared" in params:
-        sp = params["shared"]
-        cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-        h = act(linear(sp["gate"], xt, cimu, dtype)) * linear(sp["up"], xt,
-                                                              cimu, dtype)
-        y = y + linear(sp["down"], h, cimu, dtype)
+        shp = params["shared"]
+        h = act(linear(shp["gate"], xt, sp("moe.shared.gate"), dtype)) * \
+            linear(shp["up"], xt, sp("moe.shared.up"), dtype)
+        y = y + linear(shp["down"], h, sp("moe.shared.down"), dtype)
 
     return y.reshape(b, s, d), aux

@@ -63,9 +63,10 @@ def rglru_forward(params, x, cfg, state: Optional[LRUState] = None,
     from repro.distributed.autoshard import cs
 
     b, s, d = x.shape
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
-    gate = jax.nn.gelu(linear(params["in_gate"], x, cimu, dtype))
-    xr = cs(linear(params["in_x"], x, cimu, dtype), ("dp", None, "tp"))
+    sp = cfg.policy.resolver("rec")
+    gate = jax.nn.gelu(linear(params["in_gate"], x, sp("rec.in_gate"), dtype))
+    xr = cs(linear(params["in_x"], x, sp("rec.in_x"), dtype),
+            ("dp", None, "tp"))
     conv_state = state.conv if state is not None else None
     xr, new_conv = _causal_conv(xr, params["conv_w"].astype(dtype),
                                 params["conv_b"].astype(dtype), conv_state)
@@ -91,7 +92,7 @@ def rglru_forward(params, x, cfg, state: Optional[LRUState] = None,
         h = hs[:, -1]
 
     y = hs.astype(dtype) * gate
-    out = linear(params["out"], y, cimu, dtype)
+    out = linear(params["out"], y, sp("rec.out"), dtype)
     return out, LRUState(new_conv, h)
 
 

@@ -136,9 +136,9 @@ def ssm_forward(params, x, cfg, state: Optional[SSMState] = None,
     b, s, d = x.shape
     d_inner, n_heads, conv_dim = dims(cfg)
     n = cfg.ssm_state
-    cimu = cfg.cimu if cfg.cimu.mode != "digital" else None
+    sp = cfg.policy.resolver("ssm")
 
-    zxbcdt = linear(params["in_proj"], x, cimu, dtype)
+    zxbcdt = linear(params["in_proj"], x, sp("ssm.in_proj"), dtype)
     z = zxbcdt[..., :d_inner]
     xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
     dt = jax.nn.softplus(
@@ -174,7 +174,7 @@ def ssm_forward(params, x, cfg, state: Optional[SSMState] = None,
     yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6)
     y = (yf * params["norm_scale"]).astype(dtype)
 
-    out = linear(params["out_proj"], y, cimu, dtype)
+    out = linear(params["out_proj"], y, sp("ssm.out_proj"), dtype)
     return out, SSMState(new_conv, new_ssm)
 
 

@@ -171,14 +171,19 @@ def apply_stack(params: dict, x, cfg, positions, cache: Optional[dict] = None,
         if cfg.remat:
             body = jax.checkpoint(body, prevent_cse=False)
         cache_xs = cache["scanned"] if cache is not None else None
-        if cache_xs is None:
-            # scan requires pytree-matching xs: thread params only
-            (x, aux_total), ncs = jax.lax.scan(
-                lambda c, p: body(c, (p, None)),
-                (x, aux_total), params["scanned"])
-        else:
-            (x, aux_total), ncs = jax.lax.scan(
-                body, (x, aux_total), (params["scanned"], cache_xs))
+        # the scan traces the layer body once; scale energy-trace records
+        # by the number of scanned repetitions
+        from repro.accel import vmapped
+
+        with vmapped(layout.n_rep):
+            if cache_xs is None:
+                # scan requires pytree-matching xs: thread params only
+                (x, aux_total), ncs = jax.lax.scan(
+                    lambda c, p: body(c, (p, None)),
+                    (x, aux_total), params["scanned"])
+            else:
+                (x, aux_total), ncs = jax.lax.scan(
+                    body, (x, aux_total), (params["scanned"], cache_xs))
         new_cache["scanned"] = ncs
 
     for i, kind in enumerate(layout.suffix):

@@ -1,6 +1,6 @@
 """Quantization-aware-training primitives (straight-through estimators).
 
-The CIMU matmul has its own STE (repro.core.cimu); these cover the
+The accelerator matmul has its own STE (repro.accel.dispatch); these cover the
 *activation* nonlinearities of the paper's CIFAR networks: the binarizing
 sign of the ABN path and generic fake-quantization."""
 from __future__ import annotations

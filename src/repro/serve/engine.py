@@ -45,7 +45,15 @@ class Engine:
 
     def generate(self, prompts: jax.Array,
                  frontend_embeds: Optional[jax.Array] = None) -> np.ndarray:
-        """prompts: [B, S] int32 -> generated tokens [B, max_new_tokens]."""
+        """prompts: [B, S] int32 -> generated tokens [B, max_new_tokens].
+
+        Prompts must be REAL equal-length sequences, not padded: prefill
+        has no pad mask, so pad tokens would enter the KV cache as
+        ordinary context and corrupt every later position (causal
+        attention sees them).  Batching of ragged requests belongs in
+        :class:`ContinuousBatcher`, which buckets by length.
+        """
+        assert prompts.ndim == 2, "prompts must be a dense [B, S] batch"
         key = jax.random.PRNGKey(self.scfg.seed)
         logits, cache = self._prefill(self.params, prompts, frontend_embeds)
         out = []
@@ -91,18 +99,27 @@ class ContinuousBatcher:
 
     def run(self) -> dict[int, list[int]]:
         """Drain the queue, n_slots at a time (simple generational refill —
-        per-slot cache splicing is noted as the production extension)."""
+        per-slot cache splicing is noted as the production extension).
+
+        Waves are bucketed by prompt length: left-padding unequal
+        prompts would pour pad tokens into the KV cache (prefill has no
+        pad mask and causal attention attends to them), corrupting every
+        short request in the wave.  Equal-length grouping keeps prefill
+        exact at the cost of occasionally under-full waves.
+        """
         while self.pending:
-            wave, self.pending = (self.pending[: self.n_slots],
-                                  self.pending[self.n_slots:])
-            maxlen = max(len(p) for _, p in wave)
-            toks = np.zeros((len(wave), maxlen), np.int32)
-            for i, (_, p) in enumerate(wave):
-                toks[i, maxlen - len(p):] = p       # left-pad
-            gen = self.engine.generate(jnp.asarray(toks))
-            for i, (rid, _) in enumerate(wave):
-                seq = gen[i].tolist()
-                if self.scfg.eos_id >= 0 and self.scfg.eos_id in seq:
-                    seq = seq[: seq.index(self.scfg.eos_id) + 1]
-                self.results[rid] = seq
+            by_len: dict[int, list[tuple[int, np.ndarray]]] = {}
+            for rid, p in self.pending:
+                by_len.setdefault(len(p), []).append((rid, p))
+            self.pending = []
+            for _, group in sorted(by_len.items()):
+                for i in range(0, len(group), self.n_slots):
+                    wave = group[i: i + self.n_slots]
+                    toks = np.stack([p for _, p in wave]).astype(np.int32)
+                    gen = self.engine.generate(jnp.asarray(toks))
+                    for j, (rid, _) in enumerate(wave):
+                        seq = gen[j].tolist()
+                        if self.scfg.eos_id >= 0 and self.scfg.eos_id in seq:
+                            seq = seq[: seq.index(self.scfg.eos_id) + 1]
+                        self.results[rid] = seq
         return self.results

@@ -1,0 +1,67 @@
+"""Hypothesis compatibility shim.
+
+Uses real hypothesis when installed; otherwise degrades the property
+tests to a deterministic random sample (seeded, ``max_examples`` cases)
+so the suite still collects and exercises the properties in environments
+without the dependency (the tier-1 CPU container).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback sampler
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801  (mirrors the hypothesis module name)
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(
+                lambda r: [elem.sample(r)
+                           for _ in range(r.randint(min_size, max_size))])
+
+    def settings(**kw):
+        max_examples = kw.get("max_examples", 10)
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                rng = random.Random(0)
+                n = getattr(wrapper, "_max_examples", 10)
+                for _ in range(n):
+                    fn(**{k: s.sample(rng) for k, s in strategies.items()})
+
+            # hide the sampled params from pytest's fixture resolution
+            wrapper.__signature__ = inspect.Signature([])
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -1,0 +1,296 @@
+"""repro.accel API tests: policy resolution precedence, backend registry
+round-trip, override scoping, bit-exactness across backends, and the
+per-layer-kind PrecisionPolicy / whole-model override demo at LM scale."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import accel
+from repro.accel import ExecSpec, PrecisionPolicy
+from repro.configs import get_config
+from repro.models import forward, init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _operands(n=300, m=24, batch=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, n)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    return x, w
+
+
+# ------------------------------------------------------- policy resolution
+
+def test_policy_default_is_digital():
+    pol = PrecisionPolicy()
+    spec = pol.resolve("mlp.down", kind="mlp", layer=3)
+    assert spec.is_digital
+
+
+def test_policy_precedence_path_over_kind_over_layer():
+    pol = PrecisionPolicy(
+        rules=(("layer:0-2", ExecSpec(backend="bpbs", ba=8, bx=8)),
+               ("kind:mlp", ExecSpec(backend="bpbs", ba=2, bx=2)),
+               ("path:mlp.down", ExecSpec(backend="bpbs", ba=1, bx=1)),
+               ("*", ExecSpec(backend="digital_int"))),
+        default=ExecSpec(backend="bpbs", ba=4, bx=4))
+    # path beats kind and layer
+    assert pol.resolve("mlp.down", kind="mlp", layer=1).ba == 1
+    # kind beats layer
+    assert pol.resolve("mlp.up", kind="mlp", layer=1).ba == 2
+    # layer beats *
+    assert pol.resolve("attn.q", kind="attn", layer=2).ba == 8
+    # * beats default
+    assert pol.resolve("attn.q", kind="attn").backend == "digital_int"
+
+
+def test_policy_glob_paths_and_layer_ranges():
+    pol = PrecisionPolicy(
+        rules=(("path:attn.*", ExecSpec(backend="bpbs", ba=6, bx=6)),
+               ("layer:4", ExecSpec(backend="bpbs", ba=1, bx=1))))
+    assert pol.resolve("attn.qkv").ba == 6
+    assert pol.resolve("attn.o", kind="attn").ba == 6
+    assert pol.resolve("conv", layer=4).ba == 1
+    assert pol.resolve("conv", layer=5).is_digital      # out of range
+    assert pol.resolve("mlp.down").is_digital           # no rule matches
+
+
+def test_policy_resolve_tags_spec_with_path():
+    pol = PrecisionPolicy.uniform(ExecSpec(backend="bpbs"))
+    assert pol.resolve("mlp.down", kind="mlp").tag == "mlp.down"
+    assert pol.resolve("", kind="mlp").tag == "mlp"
+
+
+def test_policy_rejects_bad_patterns():
+    with pytest.raises(ValueError):
+        PrecisionPolicy(rules=(("mlp.down", ExecSpec()),))   # missing scheme
+    with pytest.raises(TypeError):
+        PrecisionPolicy(rules=(("kind:mlp", "bpbs"),))
+
+
+def test_policy_is_hashable_inside_configs():
+    pol = PrecisionPolicy(rules=(("kind:mlp", ExecSpec(backend="bpbs")),))
+    assert hash(pol) == hash(dataclasses.replace(pol))
+    cfg = get_config("olmo-1b").reduced().with_policy(pol)
+    hash(cfg)
+
+
+# ------------------------------------------------------- backend registry
+
+def test_registry_round_trip_and_unknown():
+    assert set(accel.list_backends()) >= {
+        "digital", "digital_int", "bpbs", "bpbs_ref", "pallas"}
+    with pytest.raises(KeyError):
+        accel.get_backend("nope")
+
+    calls = []
+
+    @accel.register_backend("test_counting")
+    def counting(x, w, spec, ctx):
+        calls.append(spec.tag)
+        return jnp.einsum("...n,nm->...m", x, w)
+
+    try:
+        x, w = _operands()
+        y = accel.matmul(x, w, ExecSpec(backend="test_counting",
+                                        tag="unit"))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=1e-6)
+        assert calls == ["unit"]
+    finally:
+        import repro.accel.registry as reg
+        del reg._BACKENDS["test_counting"]
+
+
+def test_backends_agree_bit_exactly_with_ideal_adc():
+    """digital_int == bpbs == bpbs_ref == pallas on the same integer grids
+    when the ADC is bypassed — the registry serves one numerics contract."""
+    x, w = _operands(n=400, m=16)
+    y_int = accel.matmul(x, w, ExecSpec(backend="digital_int", ba=4, bx=4))
+    for backend in ("bpbs", "bpbs_ref", "pallas"):
+        y = accel.matmul(x, w, ExecSpec(backend=backend, ba=4, bx=4,
+                                        ideal_adc=True, bank_n=256))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_int),
+                                   rtol=1e-5, atol=1e-3, err_msg=backend)
+
+
+# ------------------------------------------------------------- override
+
+def test_override_scoping_applies_and_restores():
+    x, w = _operands()
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4)
+    y_chip = accel.matmul(x, w, spec)
+    y_int = accel.matmul(x, w, spec.with_(backend="digital_int"))
+
+    with accel.override(backend="digital_int"):
+        np.testing.assert_array_equal(
+            np.asarray(accel.matmul(x, w, spec)), np.asarray(y_int))
+        with accel.override(ba=1, bx=1):        # nested: merges, inner wins
+            y_1b = accel.matmul(x, w, spec)
+            np.testing.assert_array_equal(
+                np.asarray(y_1b),
+                np.asarray(accel.matmul(
+                    x, w, ExecSpec(backend="digital_int", ba=1, bx=1))))
+    # scope exited: the chip model is back
+    np.testing.assert_array_equal(np.asarray(accel.matmul(x, w, spec)),
+                                  np.asarray(y_chip))
+
+
+def test_override_exempts_by_design_digital():
+    """spec=None marks dynamic-operand projections (routers, gates):
+    override must not quantize them."""
+    x, w = _operands()
+    with accel.override(backend="digital_int", ba=1, bx=1):
+        y = accel.matmul(x, w, None)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=1e-6)
+
+
+# ------------------------------------------------------------ trace hook
+
+def test_trace_records_resolved_specs_and_energy():
+    x, w = _operands(n=512, m=32)
+    pol = PrecisionPolicy(
+        rules=(("path:mlp.down", ExecSpec(backend="bpbs", ba=1, bx=1)),),
+        default=ExecSpec(backend="bpbs", ba=4, bx=4))
+    with accel.trace() as records:
+        accel.matmul(x, w, pol.resolve("mlp.down", kind="mlp"))
+        accel.matmul(x, w, pol.resolve("mlp.up", kind="mlp"))
+        accel.matmul(x, w, None)               # by-design digital: untraced
+    assert [(r.tag, r.ba) for r in records] == [("mlp.down", 1),
+                                                ("mlp.up", 4)]
+    assert all(r.n == 512 and r.m == 32 and r.calls == 4 for r in records)
+    es = accel.energy_summary(records, vdd=0.85)
+    assert es["total_pj"] > 0 and es["total_cycles"] > 0
+    # the 1-b projection converts 16x fewer (bank, col, step) triples
+    assert es["by_tag"]["mlp.down"]["pj"] < es["by_tag"]["mlp.up"]["pj"]
+
+
+def test_trace_vmapped_scales_call_counts():
+    """Inside jax.vmap the mapped axis is invisible to the dispatcher;
+    accel.vmapped(n) restores the true MVM count (MoE experts)."""
+    x, w = _operands(n=64, m=8, batch=2)
+    xs = jnp.stack([x] * 3)
+    ws = jnp.stack([w] * 3)
+    spec = ExecSpec(backend="digital_int", ba=4, bx=4)
+    with accel.trace() as records:
+        with accel.vmapped(3):
+            jax.vmap(lambda xe, we: accel.matmul(xe, we, spec))(xs, ws)
+    assert [r.calls for r in records] == [6]    # 3 experts x batch 2
+
+
+def test_trace_counts_scanned_layers_at_model_scale():
+    """The lax.scan over stacked layer params traces one body; the energy
+    trace must still count every layer's MVMs."""
+    cfg = get_config("olmo-1b").reduced().with_accel("bpbs", ba=4, bx=4)
+    assert cfg.scan_layers and cfg.n_layers == 4
+    params = init_params(cfg, KEY, max_seq=32)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    with accel.trace() as records:
+        forward(params, toks, cfg)
+    per_layer_calls = 2 * 16                       # batch * seq
+    attn_q = sum(r.calls for r in records if r.tag == "attn.q")
+    assert attn_q == per_layer_calls * cfg.n_layers
+    unembed = sum(r.calls for r in records if r.tag == "unembed")
+    assert unembed == per_layer_calls              # once, outside the scan
+
+
+def test_adc_noise_scope_feeds_sigma_model():
+    """adc_sigma_lsb does nothing without a key; accel.adc_noise supplies
+    one per dispatch, and the draw is deterministic per scope."""
+    x, w = _operands(n=300, m=16)
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4, adc_sigma_lsb=0.5)
+    y_silent = accel.matmul(x, w, spec)            # no key -> noiseless
+    np.testing.assert_array_equal(
+        np.asarray(y_silent),
+        np.asarray(accel.matmul(x, w, spec.with_(adc_sigma_lsb=0.0))))
+    with accel.adc_noise(jax.random.PRNGKey(7)):
+        y_noisy = accel.matmul(x, w, spec)
+    assert not np.array_equal(np.asarray(y_noisy), np.asarray(y_silent))
+    with accel.adc_noise(jax.random.PRNGKey(7)):   # same scope -> same draw
+        y_again = accel.matmul(x, w, spec)
+    np.testing.assert_array_equal(np.asarray(y_noisy), np.asarray(y_again))
+
+
+def test_registry_governs_digital_too():
+    """Re-registering 'digital' must take effect (the registry contract)."""
+    import repro.accel.backends as backends
+    import repro.accel.registry as reg
+
+    x, w = _operands()
+    seen = []
+
+    def counting_digital(x, w, spec, ctx):
+        seen.append(spec.backend)
+        return jnp.einsum("...n,nm->...m", x, w)
+
+    accel.register_backend("digital", counting_digital)
+    try:
+        accel.matmul(x, w, ExecSpec(backend="digital"))
+        assert seen == ["digital"]
+    finally:
+        reg._BACKENDS["digital"] = backends.digital
+
+
+def test_execspec_rejects_unknown_backend_at_construction():
+    with pytest.raises(ValueError, match="unknown accel backend"):
+        ExecSpec(backend="cimu")     # the old mode name, fails fast
+    cfg = get_config("olmo-1b").reduced()
+    with pytest.raises(ValueError, match="unknown accel backend"):
+        cfg.with_accel("nope")
+
+
+# --------------------------------------------- model-scale policy + parity
+
+def test_per_kind_policy_and_whole_model_override():
+    """The acceptance demo: one model, different (backend, ba, bx) per
+    layer kind — mirroring the paper's mixed 1-b/4-b deployments — and
+    ``override(backend="digital_int")`` flips the WHOLE model to the
+    bit-true substrate without rebuilding configs."""
+    base = get_config("llama3.2-1b").reduced()
+    pol = PrecisionPolicy(
+        rules=(("kind:attn", ExecSpec(backend="bpbs", ba=6, bx=6,
+                                      bank_n=128)),
+               ("kind:mlp", ExecSpec(backend="digital_int", ba=4, bx=4)),
+               ("path:unembed", ExecSpec(backend="digital"))),
+        default=ExecSpec(backend="digital"))
+    cfg = base.with_policy(pol)
+    params = init_params(cfg, KEY, max_seq=32)
+    toks = jax.random.randint(KEY, (1, 8), 0, cfg.vocab)
+
+    with accel.trace() as records:
+        lg_mixed, _ = forward(params, toks, cfg)
+    assert bool(jnp.isfinite(lg_mixed).all())
+    by_tag = {r.tag: r for r in records}
+    assert by_tag["attn.q"].backend == "bpbs" and by_tag["attn.q"].ba == 6
+    assert by_tag["mlp.down"].backend == "digital_int"
+    assert by_tag["unembed"].backend == "digital"
+
+    # heterogeneity is observable: mixed != all-digital
+    lg_dig, _ = forward(params, toks, base)
+    assert not np.allclose(np.asarray(lg_mixed), np.asarray(lg_dig),
+                           atol=1e-3)
+
+    # whole-model flip: override == an explicitly rebuilt digital_int
+    # config, with NO config surgery (ba/bx stay per-layer!)
+    with accel.trace() as ov_records:
+        with accel.override(backend="digital_int"):
+            lg_ov, _ = forward(params, toks, cfg)
+    assert {r.backend for r in ov_records} == {"digital_int"}
+    assert {(r.tag, r.ba) for r in ov_records} == \
+        {(r.tag, r.ba) for r in records}
+
+    # parity check: attn at 6-b through bpbs with 128-row banks is exact
+    # vs digital_int (paper §3), so the override changes nothing there and
+    # only the (already-digital_int) mlp and digital unembed flip.
+    cfg_int = base.with_policy(PrecisionPolicy(
+        rules=(("kind:attn", ExecSpec(backend="digital_int", ba=6, bx=6)),
+               ("kind:mlp", ExecSpec(backend="digital_int", ba=4, bx=4)),
+               ("path:unembed", ExecSpec(backend="digital_int"))),
+        default=ExecSpec(backend="digital_int")))
+    lg_int, _ = forward(params, toks, cfg_int)
+    np.testing.assert_allclose(np.asarray(lg_ov), np.asarray(lg_int),
+                               atol=2e-3)

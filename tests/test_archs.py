@@ -93,10 +93,11 @@ def test_windowed_ring_cache_matches_full():
                                    np.asarray(lg_full[:, t]), atol=2e-4)
 
 
-def test_cimu_mode_lm_trains():
+def test_bpbs_backend_lm_trains():
     """The paper's technique as a first-class feature: an LM with all
-    static-weight matmuls in CIMU mode still produces finite loss/grads."""
-    cfg = get_config("olmo-1b").reduced().with_cimu(mode="cimu", ba=4, bx=4)
+    static-weight matmuls on the BP/BS backend still produces finite
+    loss/grads."""
+    cfg = get_config("olmo-1b").reduced().with_accel("bpbs", ba=4, bx=4)
     params = init_params(cfg, KEY, max_seq=64)
     batch = _batch(cfg)
     (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -106,14 +107,14 @@ def test_cimu_mode_lm_trains():
                for g in jax.tree_util.tree_leaves(grads))
 
 
-def test_cimu_mode_matches_digital_int_with_small_banks():
-    """With <=255-row banks the CIMU LM forward equals the bit-true
+def test_bpbs_backend_matches_digital_int_with_small_banks():
+    """With <=255-row banks the BP/BS LM forward equals the bit-true
     integer-quantized forward exactly (paper §3 at model scale)."""
     base = get_config("llama3.2-1b").reduced()
     toks = jax.random.randint(KEY, (1, 8), 0, base.vocab)
     p = init_params(base, KEY, max_seq=16)
-    cfg_int = base.with_cimu(mode="digital_int", ba=6, bx=6)
-    cfg_chip = base.with_cimu(mode="cimu", ba=6, bx=6, bank_n=128)
+    cfg_int = base.with_accel("digital_int", ba=6, bx=6)
+    cfg_chip = base.with_accel("bpbs", ba=6, bx=6, bank_n=128)
     lg_int, _ = forward(p, toks, cfg_int)
     lg_chip, _ = forward(p, toks, cfg_chip)
     np.testing.assert_allclose(np.asarray(lg_chip), np.asarray(lg_int),

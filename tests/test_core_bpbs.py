@@ -3,11 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
+from repro import accel
+from repro.accel import ExecSpec
 from repro.core.adc import adc_quantize_sum, abn_binarize
 from repro.core.bpbs import BpbsConfig, bpbs_matmul_int, bpbs_matmul_int_reference
-from repro.core.cimu import CimuConfig, cimu_matmul
 from repro.core.quant import Coding, int_range
 
 CODINGS = [Coding.XNOR, Coding.AND]
@@ -121,20 +122,21 @@ def test_abn_threshold():
     assert set(np.unique(np.asarray(out))) <= {-1.0, 1.0}
 
 
-def test_cimu_matmul_chip_equals_ideal_with_small_banks():
+def test_accel_matmul_chip_equals_ideal_with_small_banks():
     """Activity-gated banks of <= 255 rows make the chip model EXACTLY equal
     to bit-true integer compute for arbitrary N (paper §3) — each bank's
     column dynamic range then fits the 8-b ADC."""
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(16, 512)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(512, 64)), jnp.float32)
-    y_int = cimu_matmul(x, w, CimuConfig(mode="digital_int", ba=4, bx=4))
-    y_chip = cimu_matmul(x, w, CimuConfig(mode="cimu", ba=4, bx=4, bank_n=255))
+    y_int = accel.matmul(x, w, ExecSpec(backend="digital_int", ba=4, bx=4))
+    y_chip = accel.matmul(x, w, ExecSpec(backend="bpbs", ba=4, bx=4,
+                                         bank_n=255))
     np.testing.assert_allclose(np.asarray(y_chip), np.asarray(y_int),
                                rtol=1e-5, atol=1e-4)
 
 
-def test_cimu_adc_noise_matches_analytic_bound():
+def test_accel_adc_noise_matches_analytic_bound():
     """At N=512 (> 255) the ADC adds quantization noise; its magnitude must
     match the analytic model: per plane-pair dot, err ~ U(+-step) with
     step = N/255, recombined with the BP/BS significance weights."""
@@ -142,8 +144,9 @@ def test_cimu_adc_noise_matches_analytic_bound():
     n, m, ba, bx = 512, 64, 4, 4
     x = jnp.asarray(rng.normal(size=(64, n)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
-    y_int = cimu_matmul(x, w, CimuConfig(mode="digital_int", ba=ba, bx=bx))
-    y_chip = cimu_matmul(x, w, CimuConfig(mode="cimu", ba=ba, bx=bx))
+    y_int = accel.matmul(x, w, ExecSpec(backend="digital_int", ba=ba, bx=bx))
+    y_chip = accel.matmul(x, w, ExecSpec(backend="bpbs", ba=ba, bx=bx,
+                                         bank_n=512))
     from repro.core.quant import plane_weights, quantize
     qx = quantize(x, bx, Coding.XNOR)
     qw = quantize(w, ba, Coding.XNOR, axis=1)
@@ -162,24 +165,25 @@ def test_cimu_adc_noise_matches_analytic_bound():
     assert 0.1 * pred_var < meas_var < 8.0 * pred_var, (meas_var, pred_var)
 
 
-def test_cimu_ste_gradients():
+def test_accel_ste_gradients():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(128, 16)), jnp.float32)
 
     def loss(x, w):
-        return jnp.sum(cimu_matmul(x, w, CimuConfig(mode="cimu", ba=4, bx=4)) ** 2)
+        return jnp.sum(
+            accel.matmul(x, w, ExecSpec(backend="bpbs", ba=4, bx=4)) ** 2)
 
     gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
     assert bool(jnp.isfinite(gx).all() and jnp.isfinite(gw).all())
     assert gx.shape == x.shape and gw.shape == w.shape
 
 
-def test_cimu_matmul_jit_and_batch_dims():
+def test_accel_matmul_jit_and_batch_dims():
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(2, 3, 100)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(100, 24)), jnp.float32)
-    cfg = CimuConfig(mode="cimu", ba=4, bx=4)
-    y = jax.jit(lambda x, w: cimu_matmul(x, w, cfg))(x, w)
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4)
+    y = jax.jit(lambda x, w: accel.matmul(x, w, spec))(x, w)
     assert y.shape == (2, 3, 24)
     assert bool(jnp.isfinite(y).all())

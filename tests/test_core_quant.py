@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core.quant import (
     Coding, int_range, int_to_planes, n_levels, plane_weights, planes_to_int,

@@ -167,3 +167,27 @@ def test_continuous_batcher_drains_queue():
     results = cb.run()
     assert set(results) == set(rids)
     assert all(len(v) == 4 for v in results.values())
+
+
+def test_continuous_batcher_unequal_lengths_are_not_polluted():
+    """Batched ragged prompts must decode exactly what each prompt decodes
+    alone.  The old left-padding path fed pad tokens into prefill with no
+    mask — causal attention attended to them and corrupted every short
+    request in a wave; length-bucketed waves keep prefill exact."""
+    from repro.models import init_params
+    from repro.serve.engine import ContinuousBatcher, Engine, ServeConfig
+
+    cfg = get_config("olmo-1b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+    scfg = ServeConfig(max_seq=32, max_new_tokens=4)
+    cb = ContinuousBatcher(params, cfg, scfg, n_slots=3)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab, (l,)).astype(np.int32)
+               for l in (3, 7, 5, 7)]
+    rids = [cb.submit(p) for p in prompts]
+    results = cb.run()
+
+    eng = Engine(params, cfg, scfg)
+    for rid, prompt in zip(rids, prompts):
+        solo = eng.generate(jnp.asarray(prompt[None]))[0].tolist()
+        assert results[rid] == solo, (len(prompt), results[rid], solo)
