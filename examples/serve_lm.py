@@ -47,20 +47,30 @@ def main():
     dt = time.time() - t0
     print(f"warm: {gen.size/dt:.0f} tok/s")
 
-    # --- continuous batching over a request queue
+    # --- slot-level continuous batching over a ragged request queue:
+    # ragged prompt lengths AND ragged per-request token budgets; finished
+    # slots are re-prefilled alone (pad-masked) and spliced back in while
+    # the other slots keep decoding
     cb = ContinuousBatcher(params, cfg, scfg, n_slots=args.slots)
     rids = [cb.submit(rng.integers(0, cfg.vocab,
                                    (int(rng.integers(4, 32)),)
-                                   ).astype(np.int32))
+                                   ).astype(np.int32),
+                      max_new_tokens=int(rng.integers(4, args.new_tokens + 1)))
             for _ in range(args.requests)]
+    first_token_at = {}
     t0 = time.time()
-    results = cb.run()
+    results = cb.run(on_token=lambda rid, tok: first_token_at.setdefault(
+        rid, time.time() - t0))
     dt = time.time() - t0
     total = sum(len(v) for v in results.values())
-    print(f"continuous batching: {len(rids)} requests, {total} tokens "
-          f"in {dt:.1f}s")
+    st = cb.stats
+    util = st["slot_steps"] / max(st["decode_steps"] * args.slots, 1)
+    print(f"slot-level batching: {len(rids)} requests, {total} tokens "
+          f"in {dt:.1f}s — {st['decode_steps']} decode steps, "
+          f"{st['prefills']} prefills, slot utilization {util:.0%}")
     for rid in rids[:3]:
-        print(f"  req {rid}: {results[rid][:10]}...")
+        print(f"  req {rid}: first token at {first_token_at[rid]:.2f}s, "
+              f"{results[rid][:8]}...")
 
 
 if __name__ == "__main__":

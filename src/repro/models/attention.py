@@ -82,11 +82,30 @@ class KVCache(NamedTuple):
     v: jax.Array
 
 
+def _pos_mask(q_positions, kv_positions, *, causal, window):
+    """Visibility mask [B?, 1, 1, Sq, Sk] from absolute positions.
+
+    Both position arrays may be per-row ([B, S]) or shared ([S]); negative
+    KV positions mark unwritten / padded slots and are always hidden."""
+    qi = q_positions if q_positions.ndim == 2 else q_positions[None]
+    kj = kv_positions if kv_positions.ndim == 2 else kv_positions[None]
+    qi = qi[:, None, None, :, None]
+    kj = kj[:, None, None, None, :]
+    mask = kj >= 0
+    if causal:
+        mask = mask & (qi >= kj)
+    if window is not None:
+        mask = mask & (kj > qi - window)
+    return mask
+
+
 def _dense_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
-                     kv_positions=None):
+                     kv_positions=None, q_positions=None):
     """q: [B,Sq,H,D]; k,v: [B,Sk,KV,D].  Grouped-GQA dense softmax.
     ``kv_positions`` gives the absolute position of each KV slot (ring
-    caches); negative positions mark unwritten slots."""
+    caches, pad masking); it may be per-row [B,Sk]; negative positions mark
+    unwritten/padded slots.  ``q_positions`` ([Sq] or [B,Sq]) overrides the
+    ``q_offset + arange`` query positions (per-slot decode)."""
     b, sq, h, d = q.shape
     sk, kv = k.shape[1], k.shape[2]
     g = h // kv
@@ -98,13 +117,11 @@ def _dense_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
     v = cs(v, kv_spec)
     s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    qi = (jnp.arange(sq) + q_offset)[:, None]
-    kj = (jnp.arange(sk) if kv_positions is None else kv_positions)[None, :]
-    mask = kj >= 0
-    if causal:
-        mask &= qi >= kj
-    if window is not None:
-        mask &= kj > qi - window
+    if q_positions is None:
+        q_positions = jnp.arange(sq) + q_offset
+    if kv_positions is None:
+        kv_positions = jnp.arange(sk)
+    mask = _pos_mask(q_positions, kv_positions, causal=causal, window=window)
     s = jnp.where(mask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(jnp.isnan(p), 0.0, p)
@@ -114,7 +131,7 @@ def _dense_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
 
 def _chunked_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
                        chunk=DEFAULT_CHUNK, kv_positions=None,
-                       scan_remat=False, bf16_probs=False):
+                       q_positions=None, scan_remat=False, bf16_probs=False):
     """Online-softmax over KV chunks (lax.scan): never materializes the
     full score matrix — the pure-XLA counterpart of the Pallas kernel."""
     b, sq, h, d = q.shape
@@ -122,11 +139,16 @@ def _chunked_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
     g = h // kv
     if kv_positions is None:
         kv_positions = jnp.arange(sk)
+    if kv_positions.ndim == 1:
+        kv_positions = kv_positions[None]                     # -> [B?, Sk]
+    if q_positions is None:
+        q_positions = jnp.arange(sq) + q_offset
     pad = (-sk) % chunk
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-1)
     n_chunks = k.shape[1] // chunk
     mode = _attn_tp_mode(kv, g, sq, d)
     kv_spec = {"kv": (None, "dp", None, "tp", None),
@@ -135,20 +157,15 @@ def _chunked_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
     vc = v.reshape(b, n_chunks, chunk, kv, v.shape[-1]).transpose(1, 0, 2, 3, 4)
     kc = cs(kc, kv_spec)
     vc = cs(vc, kv_spec)
-    pc = kv_positions.reshape(n_chunks, chunk)
+    pc = kv_positions.reshape(kv_positions.shape[0], n_chunks,
+                              chunk).transpose(1, 0, 2)       # [nc, B?, chunk]
     qg = cs(q.reshape(b, sq, kv, g, d).astype(jnp.float32), _qg_spec(mode))
-    qi = (jnp.arange(sq) + q_offset)[:, None]
 
     def step(carry, xs):
         m, l, acc = carry
         kj, kch, vch = xs
         s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kch.astype(jnp.float32)) * scale
-        kj = kj[None, :]
-        mask = kj >= 0                       # hide padding / unwritten slots
-        if causal:
-            mask = mask & (qi >= kj)
-        if window is not None:
-            mask = mask & (kj > qi - window)
+        mask = _pos_mask(q_positions, kj, causal=causal, window=window)
         s = jnp.where(mask, s, -1e30)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
@@ -184,26 +201,57 @@ def _chunked_attention(q, k, v, *, causal, window, q_offset, scale, dtype,
 
 def sdpa(q, k, v, *, causal=True, window=None, q_offset=0,
          scale=None, dtype=jnp.bfloat16, chunk=DEFAULT_CHUNK,
-         kv_positions=None, scan_remat=False, bf16_probs=False):
+         kv_positions=None, q_positions=None, scan_remat=False,
+         bf16_probs=False):
     """Dispatch dense vs chunked by KV length."""
     if scale is None:
         scale = q.shape[-1] ** -0.5
     if k.shape[1] <= 2 * chunk:
         return _dense_attention(q, k, v, causal=causal, window=window,
                                 q_offset=q_offset, scale=scale, dtype=dtype,
-                                kv_positions=kv_positions)
+                                kv_positions=kv_positions,
+                                q_positions=q_positions)
     return _chunked_attention(q, k, v, causal=causal, window=window,
                               q_offset=q_offset, scale=scale, dtype=dtype,
                               chunk=chunk, kv_positions=kv_positions,
+                              q_positions=q_positions,
                               scan_remat=scan_remat, bf16_probs=bf16_probs)
 
 
 def ring_slot_positions(cache_len: int, cache_pos) -> jax.Array:
     """Absolute position held by each ring-cache slot after writing at
     ``cache_pos``: slot i holds the largest p <= cache_pos with p % L == i
-    (negative = not yet written)."""
+    (negative = not yet written).  ``cache_pos`` may be per-row [B] — the
+    result then gains a leading batch dim ([B, L])."""
     i = jnp.arange(cache_len)
+    cache_pos = jnp.asarray(cache_pos)
+    if cache_pos.ndim:
+        cache_pos = cache_pos[:, None]
     return cache_pos - jnp.mod(cache_pos - i, cache_len)
+
+
+def _row_positions(cache_pos, batch: int) -> jax.Array:
+    """Normalize a scalar or per-row decode position to [B] int32."""
+    cp = jnp.asarray(cache_pos, jnp.int32)
+    if cp.ndim == 0:
+        cp = jnp.broadcast_to(cp, (batch,))
+    return cp
+
+
+def left_align(x: jax.Array, pad_mask: jax.Array) -> jax.Array:
+    """Shift each row of ``x`` [B, S, ...] left by its pad count so the
+    valid entries of a LEFT-padded sequence land at indices [0, len_b);
+    the tail is zero-filled.  ``pad_mask``: [B, S] bool, True = real token
+    (pads must be a contiguous prefix)."""
+    s = x.shape[1]
+    lengths = pad_mask.sum(axis=1).astype(jnp.int32)          # [B]
+    shift = s - lengths                                       # left-pad count
+    idx = jnp.minimum(jnp.arange(s)[None, :] + shift[:, None], s - 1)
+    idx = idx.reshape(idx.shape + (1,) * (x.ndim - 2))
+    gathered = jnp.take_along_axis(x, idx, axis=1)
+    valid = (jnp.arange(s)[None, :] < lengths[:, None])
+    valid = valid.reshape(valid.shape + (1,) * (x.ndim - 2))
+    return jnp.where(valid, gathered, jnp.zeros((), x.dtype))
 
 
 # ------------------------------------------------------------------ GQA
@@ -228,9 +276,16 @@ def init_kv_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> KVCache:
 
 
 def attention(params, x, cfg, positions, cache: Optional[KVCache] = None,
-              cache_pos=None, dtype=jnp.bfloat16):
+              cache_pos=None, dtype=jnp.bfloat16, pad_mask=None):
     """Full-seq (train/prefill) when cache_pos is None; else single-step
-    decode updating ``cache`` at ``cache_pos``.  Returns (out, new_cache)."""
+    decode updating ``cache`` at ``cache_pos``.  Returns (out, new_cache).
+
+    ``pad_mask`` ([B, S] bool, True = real token; prefill only) supports
+    LEFT-padded ragged prompts: ``positions`` must then be the per-row true
+    token positions ([B, S], ``cumsum(mask) - 1``); padded key slots are
+    hidden from attention and the KV cache is written left-aligned so row b
+    holds exactly what an unpadded prefill of its real tokens would hold.
+    ``cache_pos`` may be per-row [B] (slot-level continuous batching)."""
     b, s, _ = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     sp = cfg.policy.resolver("attn")
@@ -245,35 +300,47 @@ def attention(params, x, cfg, positions, cache: Optional[KVCache] = None,
         k = apply_rope(k, positions, cfg.rope_theta)
 
     if cache_pos is None:
+        q_pos = kv_pos = None
+        if pad_mask is not None:
+            q_pos = positions                       # [B, S] true positions
+            kv_pos = jnp.where(pad_mask, positions, -1)
         o = sdpa(q, k, v, causal=cfg.causal, window=cfg.attn_window,
-                 q_offset=0, dtype=dtype, scan_remat=cfg.attn_scan_remat,
+                 q_offset=0, dtype=dtype, kv_positions=kv_pos,
+                 q_positions=q_pos, scan_remat=cfg.attn_scan_remat,
                  bf16_probs=cfg.attn_bf16_probs)
         new_cache = None
         if cache is not None:   # prefill: fill the (possibly ring) cache
             length = cache.k.shape[1]
+            kc, vc = k, v
+            if pad_mask is not None:
+                if length < s:
+                    raise NotImplementedError(
+                        "pad-masked prefill into a ring cache shorter than "
+                        "the padded prompt is unsupported")
+                kc, vc = left_align(k, pad_mask), left_align(v, pad_mask)
             if length >= s:
                 ck = jax.lax.dynamic_update_slice(
-                    cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+                    cache.k, kc.astype(cache.k.dtype), (0, 0, 0, 0))
                 cv = jax.lax.dynamic_update_slice(
-                    cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+                    cache.v, vc.astype(cache.v.dtype), (0, 0, 0, 0))
             else:               # keep only the trailing window, ring-aligned
                 off = (s - length) % length
-                ck = jnp.roll(k[:, s - length:].astype(cache.k.dtype),
+                ck = jnp.roll(kc[:, s - length:].astype(cache.k.dtype),
                               off, axis=1)
-                cv = jnp.roll(v[:, s - length:].astype(cache.v.dtype),
+                cv = jnp.roll(vc[:, s - length:].astype(cache.v.dtype),
                               off, axis=1)
             new_cache = KVCache(ck, cv)
     else:
         length = cache.k.shape[1]
-        slot = jnp.mod(cache_pos, length)
-        ck = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, slot, 0, 0))
+        cp = _row_positions(cache_pos, b)
+        slot = jnp.mod(cp, length)
+        ck = cache.k.at[jnp.arange(b), slot].set(k[:, 0].astype(cache.k.dtype))
+        cv = cache.v.at[jnp.arange(b), slot].set(v[:, 0].astype(cache.v.dtype))
         new_cache = KVCache(ck, cv)
-        kv_pos = ring_slot_positions(length, cache_pos)
+        kv_pos = ring_slot_positions(length, cp)              # [B, L]
         o = sdpa(q, ck, cv, causal=True, window=cfg.attn_window,
-                 q_offset=cache_pos, dtype=dtype, kv_positions=kv_pos)
+                 dtype=dtype, kv_positions=kv_pos,
+                 q_positions=cp[:, None])
     out = linear(params["wo"], o.reshape(b, s, h * hd), sp("attn.o"), dtype)
     return out, new_cache
 
@@ -307,9 +374,10 @@ def init_mla(key, cfg) -> dict:
 
 
 def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
-                  cache_pos=None, dtype=jnp.bfloat16):
+                  cache_pos=None, dtype=jnp.bfloat16, pad_mask=None):
     """Multi-head Latent Attention (deepseek-v2): the KV cache stores only
-    the rank-512 latent + shared rope key per token."""
+    the rank-512 latent + shared rope key per token.  ``pad_mask`` /
+    per-row ``cache_pos`` semantics as in :func:`attention`."""
     b, s, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -327,22 +395,32 @@ def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
                     dtype)[:, :, None, :]
     k_rope = apply_rope(k_rope, positions, cfg.rope_theta)       # [B,S,1,dr]
 
+    q_pos = kv_pos = None
     if cache_pos is None:
         full_c, full_rope, q_off = c_kv, k_rope, 0
+        if pad_mask is not None:
+            q_pos = positions
+            kv_pos = jnp.where(pad_mask, positions, -1)
         new_cache = None
         if cache is not None:   # prefill into the pre-allocated cache
+            ckv_w, krope_w = c_kv, k_rope[:, :, 0, :]
+            if pad_mask is not None:
+                ckv_w = left_align(ckv_w, pad_mask)
+                krope_w = left_align(krope_w, pad_mask)
             cc = jax.lax.dynamic_update_slice(
-                cache.c_kv, c_kv.astype(cache.c_kv.dtype), (0, 0, 0))
+                cache.c_kv, ckv_w.astype(cache.c_kv.dtype), (0, 0, 0))
             cr = jax.lax.dynamic_update_slice(
-                cache.k_rope, k_rope[:, :, 0, :].astype(cache.k_rope.dtype),
+                cache.k_rope, krope_w.astype(cache.k_rope.dtype),
                 (0, 0, 0))
             new_cache = MLACache(cc, cr)
     else:
-        cc = jax.lax.dynamic_update_slice(cache.c_kv, c_kv, (0, cache_pos, 0))
-        cr = jax.lax.dynamic_update_slice(cache.k_rope, k_rope[:, :, 0, :],
-                                          (0, cache_pos, 0))
+        cp = _row_positions(cache_pos, b)
+        rows = jnp.arange(b)
+        cc = cache.c_kv.at[rows, cp].set(c_kv[:, 0])
+        cr = cache.k_rope.at[rows, cp].set(k_rope[:, 0, 0, :])
         new_cache = MLACache(cc, cr)
-        full_c, full_rope, q_off = cc, cr[:, :, None, :], cache_pos
+        full_c, full_rope, q_off = cc, cr[:, :, None, :], 0
+        q_pos = cp[:, None]
 
     kvu = linear(params["w_ukv"], full_c, sp("attn.ukv"), dtype)
     kvu = cs(kvu.reshape(b, full_c.shape[1], h, dn + dv),
@@ -353,6 +431,7 @@ def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
 
     o = sdpa(q, k, v, causal=True, q_offset=q_off,
              scale=(dn + dr) ** -0.5, dtype=dtype,
+             kv_positions=kv_pos, q_positions=q_pos,
              scan_remat=cfg.attn_scan_remat, bf16_probs=cfg.attn_bf16_probs)
     out = linear(params["wo"], o.reshape(b, s, h * dv), sp("attn.o"), dtype)
     return out, new_cache

@@ -89,14 +89,14 @@ def _encode(params, frontend_embeds, cfg, dtype):
 
 
 def _decoder_with_cross(params, x, cfg, positions, cross_kv, cache,
-                        cache_pos, dtype):
+                        cache_pos, dtype, pad_mask=None):
     """Whisper decoder: scanned (self-attn block + cross-attn) layers.
     ``cross_kv``: per-layer stacked (k, v) from the encoder."""
     def body(carry, xs):
         x = carry
         p_block, p_cross, ckv, c = xs
         x, nc, _ = tfm.apply_block(p_block, x, cfg, "attn", positions,
-                                   c, cache_pos, dtype)
+                                   c, cache_pos, dtype, pad_mask=pad_mask)
         h = norm(p_cross["ln"], x, cfg.norm)
         x = x + attn_mod.cross_attention(p_cross["attn"], h, ckv, cfg, dtype)
         return x, nc
@@ -199,24 +199,45 @@ def loss_fn(params, batch: dict, cfg):
 
 class DecodeCache(NamedTuple):
     layers: Any
-    pos: jax.Array                      # next write position (scalar int32)
+    pos: jax.Array                      # per-slot next write position [B] int32
     cross_kv: Any = None                # whisper: per-layer encoder k/v
 
 
 def init_cache(cfg, batch: int, s_max: int) -> DecodeCache:
     dtype = _dtype(cfg)
     layers = tfm.init_stack_cache(cfg, batch, s_max, dtype)
-    return DecodeCache(layers, jnp.zeros((), jnp.int32), None)
+    return DecodeCache(layers, jnp.zeros((batch,), jnp.int32), None)
 
 
 def prefill(params, tokens, cfg, s_max: Optional[int] = None,
-            frontend_embeds=None):
-    """Run the full prompt; returns (last-position logits, DecodeCache)."""
+            frontend_embeds=None, pad_mask=None):
+    """Run the full prompt; returns (last-position logits, DecodeCache).
+
+    ``pad_mask`` ([B, S] bool, True = real token) admits LEFT-padded ragged
+    prompts in one batch: padded positions are masked out of attention and
+    made identity transitions in the recurrent mixers, per-row positions
+    are the true token indices, and the caches are written left-aligned —
+    so each row's logits and cache match an unpadded prefill of just its
+    real tokens, and ``cache.pos`` carries each row's true length.  Pads
+    must be a contiguous prefix of each row (left padding only).
+
+    Caveat: MoE expert-capacity routing is shared across all (real + pad)
+    tokens in the batch, so under tight ``moe_capacity_factor`` a padded
+    MoE prefill can drop different tokens than an unpadded one.
+    """
     dtype = _dtype(cfg)
     b, s = tokens.shape
     if s_max is None:
         s_max = s
-    positions = jnp.arange(s)
+    if pad_mask is not None:
+        pad_mask = pad_mask.astype(bool)
+        lengths = pad_mask.sum(axis=1).astype(jnp.int32)        # [B]
+        positions = jnp.maximum(jnp.cumsum(pad_mask, axis=1) - 1, 0
+                                ).astype(jnp.int32)             # [B, S]
+        pos_out = lengths
+    else:
+        positions = jnp.arange(s)
+        pos_out = jnp.full((b,), s, jnp.int32)
     cache = init_cache(cfg, b, s_max)
 
     if cfg.is_encdec:
@@ -226,32 +247,39 @@ def prefill(params, tokens, cfg, s_max: Optional[int] = None,
         enc_out = _encode(params, frontend_embeds, cfg, dtype)
         cross_kv = _cross_kv_all_layers(params, enc_out, cfg, dtype)
         x = embed(params["embed"], tokens, dtype, cfg.onehot_embed)
-        x = x + params["dec_pos"][:s][None].astype(dtype)
+        if pad_mask is not None:
+            x = x + params["dec_pos"][positions].astype(dtype)
+        else:
+            x = x + params["dec_pos"][:s][None].astype(dtype)
         x, layers = _decoder_with_cross(params, x, cfg, positions, cross_kv,
-                                        cache.layers, None, dtype)
+                                        cache.layers, None, dtype,
+                                        pad_mask=pad_mask)
     else:
         cross_kv = None
         x = _embed_inputs(params, tokens, cfg, frontend_embeds, dtype)
         x, layers, _ = tfm.apply_stack(params["stack"], x, cfg, positions,
-                                       cache.layers, dtype=dtype)
+                                       cache.layers, dtype=dtype,
+                                       pad_mask=pad_mask)
     x = norm(params["final_norm"], x[:, -1:], cfg.norm)
     logits = _lm_logits(params, x, cfg, dtype)
-    return logits[:, 0], DecodeCache(layers, jnp.asarray(s, jnp.int32),
-                                     cross_kv)
+    return logits[:, 0], DecodeCache(layers, pos_out, cross_kv)
 
 
 def decode_step(params, token, cache: DecodeCache, cfg):
     """One decode step.  token: [B] int32.  Returns (logits [B, vocab],
-    updated cache)."""
+    updated cache).  ``cache.pos`` is per-slot ([B]; a scalar is accepted
+    and broadcast), so slots spliced in at different sequence lengths
+    decode together in one fixed-width batch."""
     dtype = _dtype(cfg)
     b = token.shape[0]
-    pos = cache.pos
-    positions = pos[None, None] + jnp.zeros((b, 1), jnp.int32)
+    pos = jnp.asarray(cache.pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    positions = pos[:, None]
     x = embed(params["embed"], token[:, None], dtype, cfg.onehot_embed)
 
     if cfg.is_encdec:
-        x = x + jax.lax.dynamic_slice_in_dim(
-            params["dec_pos"], pos, 1, axis=0)[None].astype(dtype)
+        x = x + jnp.take(params["dec_pos"], pos, axis=0)[:, None].astype(dtype)
         x, layers = _decoder_with_cross(params, x, cfg, positions,
                                         cache.cross_kv, cache.layers, pos,
                                         dtype)
@@ -262,3 +290,57 @@ def decode_step(params, token, cache: DecodeCache, cfg):
     x = norm(params["final_norm"], x, cfg.norm)
     logits = _lm_logits(params, x, cfg, dtype)
     return logits[:, 0], DecodeCache(layers, pos + 1, cache.cross_kv)
+
+
+# ------------------------------------------------- per-slot cache splicing
+
+def _map_slot(fn, caches):
+    """Apply ``fn(batch_axis, *leaves)`` across one-or-more DecodeCache
+    ``layers`` trees.  Prefix/suffix block caches carry the batch at axis
+    0; scanned block caches are stacked over layers, batch at axis 1."""
+    first = caches[0]
+    return {
+        "prefix": [jax.tree_util.tree_map(lambda *ls: fn(0, *ls),
+                                          *[c["prefix"][i] for c in caches])
+                   for i in range(len(first["prefix"]))],
+        "scanned": {k: jax.tree_util.tree_map(lambda *ls: fn(1, *ls),
+                                              *[c["scanned"][k]
+                                                for c in caches])
+                    for k in first["scanned"]},
+        "suffix": [jax.tree_util.tree_map(lambda *ls: fn(0, *ls),
+                                          *[c["suffix"][i] for c in caches])
+                   for i in range(len(first["suffix"]))],
+    }
+
+
+def slice_slot(cache: DecodeCache, i) -> DecodeCache:
+    """Extract batch slot ``i`` of a DecodeCache as a batch-1 cache.
+
+    Pytree-generic over prefix/scanned/suffix layers (KV caches, MLA
+    latents, LRU/SSM states) and the whisper ``cross_kv``."""
+    def take(axis, leaf):
+        return jax.lax.dynamic_slice_in_dim(leaf, i, 1, axis=axis)
+
+    layers = _map_slot(take, (cache.layers,))
+    pos = jax.lax.dynamic_slice_in_dim(cache.pos, i, 1, axis=0)
+    ckv = (None if cache.cross_kv is None else
+           jax.tree_util.tree_map(lambda l: take(1, l), cache.cross_kv))
+    return DecodeCache(layers, pos, ckv)
+
+
+def splice_slot(cache: DecodeCache, slot: DecodeCache, i) -> DecodeCache:
+    """Write a batch-1 ``slot`` cache (e.g. a fresh single-request prefill)
+    into batch slot ``i`` of a live batch cache — the other slots are
+    untouched, which is what lets one finished slot be retired and refilled
+    while the rest keep decoding (slot-level continuous batching)."""
+    def put(axis, dst, src):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), i, axis=axis)
+
+    layers = _map_slot(put, (cache.layers, slot.layers))
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, slot.pos.astype(cache.pos.dtype), i, axis=0)
+    ckv = (None if cache.cross_kv is None else
+           jax.tree_util.tree_map(lambda d, s: put(1, d, s),
+                                  cache.cross_kv, slot.cross_kv))
+    return DecodeCache(layers, pos, ckv)

@@ -56,8 +56,13 @@ def _lru_scan(a, b):
 
 
 def rglru_forward(params, x, cfg, state: Optional[LRUState] = None,
-                  decode: bool = False, dtype=jnp.bfloat16):
-    """x: [B, S, d] -> (y, new_state)."""
+                  decode: bool = False, dtype=jnp.bfloat16, pad_mask=None):
+    """x: [B, S, d] -> (y, new_state).
+
+    ``pad_mask`` ([B, S] bool, True = real token; left-padded prefill):
+    padded steps become identity transitions (a = 1, input term = 0) and
+    their conv inputs are zeroed, so the recurrent/conv state after a
+    left-padded prompt equals the state after the unpadded prompt."""
     from .ssm import _causal_conv   # same depthwise causal conv
 
     from repro.distributed.autoshard import cs
@@ -67,6 +72,8 @@ def rglru_forward(params, x, cfg, state: Optional[LRUState] = None,
     gate = jax.nn.gelu(linear(params["in_gate"], x, sp("rec.in_gate"), dtype))
     xr = cs(linear(params["in_x"], x, sp("rec.in_x"), dtype),
             ("dp", None, "tp"))
+    if pad_mask is not None:
+        xr = xr * pad_mask[..., None].astype(xr.dtype)
     conv_state = state.conv if state is not None else None
     xr, new_conv = _causal_conv(xr, params["conv_w"].astype(dtype),
                                 params["conv_b"].astype(dtype), conv_state)
@@ -78,6 +85,10 @@ def rglru_forward(params, x, cfg, state: Optional[LRUState] = None,
     a = cs(jnp.exp(log_a), ("dp", None, "tp"))
     gated = cs(jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf),
                ("dp", None, "tp"))
+    if pad_mask is not None:
+        m = pad_mask[..., None]
+        a = jnp.where(m, a, 1.0)
+        gated = jnp.where(m, gated, 0.0)
 
     if decode:
         assert s == 1 and state is not None

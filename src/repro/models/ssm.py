@@ -131,8 +131,14 @@ def ssd_chunked(x, dt, A, B_, C_, chunk: int):
 
 
 def ssm_forward(params, x, cfg, state: Optional[SSMState] = None,
-                decode: bool = False, dtype=jnp.bfloat16):
-    """Full mixer.  x: [B, S, d].  Returns (y, new_state)."""
+                decode: bool = False, dtype=jnp.bfloat16, pad_mask=None):
+    """Full mixer.  x: [B, S, d].  Returns (y, new_state).
+
+    ``pad_mask`` ([B, S] bool, True = real token; left-padded prefill):
+    padded steps are made identity transitions — conv inputs zeroed (so
+    the carried conv state matches an unpadded run) and ``dt`` zeroed (so
+    ``exp(dt*A) = 1`` passes the SSD state through and the padded step
+    contributes nothing to any real position's output)."""
     b, s, d = x.shape
     d_inner, n_heads, conv_dim = dims(cfg)
     n = cfg.ssm_state
@@ -143,6 +149,9 @@ def ssm_forward(params, x, cfg, state: Optional[SSMState] = None,
     xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
     dt = jax.nn.softplus(
         zxbcdt[..., -n_heads:].astype(jnp.float32) + params["dt_bias"])
+    if pad_mask is not None:
+        xbc = xbc * pad_mask[..., None].astype(xbc.dtype)
+        dt = dt * pad_mask[..., None].astype(dt.dtype)
 
     conv_state = state.conv if state is not None else None
     xbc, new_conv = _causal_conv(xbc, params["conv_w"].astype(dtype),

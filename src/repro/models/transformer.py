@@ -56,8 +56,9 @@ def init_block_cache(cfg, kind: str, batch: int, s_max: int, dtype):
 
 
 def apply_block(params: dict, x, cfg, kind: str, positions, cache=None,
-                cache_pos=None, dtype=jnp.bfloat16):
-    """Returns (x, new_cache, aux_loss)."""
+                cache_pos=None, dtype=jnp.bfloat16, pad_mask=None):
+    """Returns (x, new_cache, aux_loss).  ``pad_mask`` ([B, S] bool, True =
+    real token) enables left-padded ragged prefill — see the mixers."""
     from repro.distributed.autoshard import cs
 
     decode = cache_pos is not None
@@ -67,13 +68,15 @@ def apply_block(params: dict, x, cfg, kind: str, positions, cache=None,
     if kind in ("attn", "moe"):
         fn = attn_mod.mla_attention if cfg.mla else attn_mod.attention
         mix, new_cache = fn(params["attn"], h, cfg, positions, cache,
-                            cache_pos, dtype)
+                            cache_pos, dtype, pad_mask=pad_mask)
     elif kind == "rec":
         mix, new_cache = rglru_mod.rglru_forward(params["rec"], h, cfg,
-                                                 cache, decode, dtype)
+                                                 cache, decode, dtype,
+                                                 pad_mask=pad_mask)
     elif kind == "ssm":
         mix, new_cache = ssm_mod.ssm_forward(params["ssm"], h, cfg,
-                                             cache, decode, dtype)
+                                             cache, decode, dtype,
+                                             pad_mask=pad_mask)
         return x + mix, new_cache, jnp.zeros((), jnp.float32)
     x = x + mix
     h2 = norm(params["ln2"], x, cfg.norm)
@@ -141,14 +144,15 @@ def init_stack_cache(cfg, batch: int, s_max: int, dtype=jnp.bfloat16) -> dict:
 
 
 def apply_stack(params: dict, x, cfg, positions, cache: Optional[dict] = None,
-                cache_pos=None, dtype=jnp.bfloat16):
+                cache_pos=None, dtype=jnp.bfloat16, pad_mask=None):
     """Returns (x, new_cache_or_None, total_aux_loss)."""
     layout = stack_layout(cfg)
     aux_total = jnp.zeros((), jnp.float32)
     new_cache: dict = {"prefix": [], "scanned": {}, "suffix": []}
 
     def run_one(kind, p, x, c):
-        return apply_block(p, x, cfg, kind, positions, c, cache_pos, dtype)
+        return apply_block(p, x, cfg, kind, positions, c, cache_pos, dtype,
+                           pad_mask=pad_mask)
 
     for i, kind in enumerate(layout.prefix):
         c = cache["prefix"][i] if cache is not None else None

@@ -1,20 +1,30 @@
-"""Batched serving engine: prefill + decode with continuous batching.
+"""Batched serving engine: prefill + decode with slot-level continuous
+batching.
 
-The engine keeps a fixed pool of batch slots; finished sequences are
-retired and their slots refilled from a pending queue without stalling the
-other slots (continuous batching).  Both phases are jitted with donated
-caches so decode is a single in-place device step.
+The engine keeps a fixed pool of batch slots.  Decode always runs at full
+batch width, jitted with a donated cache, and ``DecodeCache.pos`` is
+per-slot — so slots at different sequence lengths share one device step.
+Whenever a slot finishes (EOS or token budget) it is retired and refilled
+*alone*: the new request is left-padded to a power-of-two bucket,
+prefilled with a pad mask (so padding never pollutes its cache), and its
+batch-1 cache is spliced into the live batch cache while the other slots
+keep decoding.  No generational waves, no head-of-line blocking.
+
+Sampling keys are derived per request as ``fold_in(fold_in(key,
+request_id), step)`` — a request's sampled tokens never depend on which
+slots or neighbours it shared a batch with.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import decode_step, prefill
+from repro.models import decode_step, init_cache, prefill, splice_slot
 
 
 @dataclasses.dataclass
@@ -33,38 +43,56 @@ class Engine:
         self.scfg = serve_cfg
         self._prefill = jax.jit(
             lambda p, t, fe: prefill(p, t, cfg, serve_cfg.max_seq, fe))
+        # pad-masked variant for ragged admission (one compile per bucket
+        # length — jit caches per shape)
+        self._prefill_padded = jax.jit(
+            lambda p, t, m: prefill(p, t, cfg, serve_cfg.max_seq,
+                                    pad_mask=m))
         self._decode = jax.jit(
             lambda p, tok, cache: decode_step(p, tok, cache, cfg),
             donate_argnums=2)
+        self._base_key = jax.random.PRNGKey(serve_cfg.seed)
 
-    def _sample(self, logits, key):
+    def sample(self, logits, request_ids, steps):
+        """Sample next tokens [B].  Greedy at temperature 0; otherwise each
+        row uses the key ``fold_in(fold_in(key, request_id), step)`` where
+        ``step`` is the row's own generated-token index — so the sampled
+        sequence of a request is a pure function of (seed, request_id,
+        logits) and does not depend on batch composition or arrival order.
+        """
         if self.scfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.scfg.temperature).astype(jnp.int32)
+
+        def one(rid, step, lg):
+            k = jax.random.fold_in(
+                jax.random.fold_in(self._base_key, rid), step)
+            return jax.random.categorical(k, lg / self.scfg.temperature)
+
+        return jax.vmap(one)(jnp.asarray(request_ids, jnp.int32),
+                             jnp.asarray(steps, jnp.int32),
+                             logits).astype(jnp.int32)
 
     def generate(self, prompts: jax.Array,
-                 frontend_embeds: Optional[jax.Array] = None) -> np.ndarray:
+                 frontend_embeds: Optional[jax.Array] = None,
+                 request_ids=None) -> np.ndarray:
         """prompts: [B, S] int32 -> generated tokens [B, max_new_tokens].
 
-        Prompts must be REAL equal-length sequences, not padded: prefill
-        has no pad mask, so pad tokens would enter the KV cache as
-        ordinary context and corrupt every later position (causal
-        attention sees them).  Batching of ragged requests belongs in
-        :class:`ContinuousBatcher`, which buckets by length.
+        Prompts must be REAL equal-length sequences, not padded (this
+        convenience path passes no pad mask; ragged batching belongs in
+        :class:`ContinuousBatcher`).  ``request_ids`` (default
+        ``arange(B)``) seed the per-row sampling keys; pass each request's
+        stable id to make sampled outputs independent of batch composition.
         """
         assert prompts.ndim == 2, "prompts must be a dense [B, S] batch"
-        key = jax.random.PRNGKey(self.scfg.seed)
+        b = prompts.shape[0]
+        rids = np.arange(b) if request_ids is None else np.asarray(request_ids)
         logits, cache = self._prefill(self.params, prompts, frontend_embeds)
-        out = []
-        key, sub = jax.random.split(key)
-        tok = self._sample(logits, sub)
-        out.append(tok)
+        tok = self.sample(logits, rids, np.zeros(b, np.int64))
+        out = [tok]
         done = jnp.zeros_like(tok, dtype=bool)
-        for _ in range(self.scfg.max_new_tokens - 1):
+        for t in range(1, self.scfg.max_new_tokens):
             logits, cache = self._decode(self.params, tok, cache)
-            key, sub = jax.random.split(key)
-            nxt = self._sample(logits, sub)
+            nxt = self.sample(logits, rids, np.full(b, t))
             if self.scfg.eos_id >= 0:
                 done = done | (tok == self.scfg.eos_id)
                 nxt = jnp.where(done, self.scfg.eos_id, nxt)
@@ -73,53 +101,172 @@ class Engine:
         return np.stack([np.asarray(t) for t in out], axis=1)
 
 
-class ContinuousBatcher:
-    """Slot-based continuous batching over a fixed decode batch.
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    budget: int
+    n_gen: int
 
-    Requests (token lists) are queued; whenever a slot finishes (EOS or
-    token budget) it is refilled by re-prefilling ONLY that request and
-    splicing its cache into the batch cache.  Decode always runs at full
-    batch width — no head-of-line blocking.
+
+_Request = collections.namedtuple("_Request", "rid prompt budget")
+
+
+class ContinuousBatcher:
+    """Slot-level continuous batching over a fixed decode batch.
+
+    ``run()`` drives one persistent decode loop: every iteration is a
+    single full-width jitted decode step; finished slots (per-slot EOS or
+    token budget) are retired between steps and refilled from the pending
+    queue by re-prefilling ONLY that request (left-padded to a power-of-two
+    bucket, pad-masked) and splicing its batch-1 cache into the live batch
+    cache.  Ragged traffic therefore never idles a slot for a whole
+    generational wave.
+
+    ``stats`` after a run: ``decode_steps`` (batched model steps),
+    ``slot_steps`` (sum of active slots over those steps — utilization is
+    ``slot_steps / (decode_steps * n_slots)``), ``prefills``, and
+    ``generated_tokens``.
     """
 
     def __init__(self, params, cfg, serve_cfg: ServeConfig, n_slots: int):
         self.engine = Engine(params, cfg, serve_cfg)
         self.params, self.cfg, self.scfg = params, cfg, serve_cfg
         self.n_slots = n_slots
-        self.pending: list[tuple[int, np.ndarray]] = []
+        self.pending: collections.deque[_Request] = collections.deque()
         self.results: dict[int, list[int]] = {}
+        self.stats = {"decode_steps": 0, "slot_steps": 0, "prefills": 0,
+                      "generated_tokens": 0}
+        # donated jit: splicing one slot must be an in-place scatter on the
+        # live batch cache, not a full cache copy per admission
+        self._splice = jax.jit(splice_slot, donate_argnums=0)
         self._next_id = 0
 
-    def submit(self, prompt: np.ndarray) -> int:
+    def submit(self, prompt: np.ndarray,
+               max_new_tokens: Optional[int] = None) -> int:
+        """Queue a request; returns its id.  ``max_new_tokens`` overrides
+        the ServeConfig budget per request (ragged output lengths)."""
+        assert len(prompt) <= self.scfg.max_seq
         rid = self._next_id
         self._next_id += 1
-        self.pending.append((rid, prompt))
-        self.results[rid] = []
+        budget = (self.scfg.max_new_tokens if max_new_tokens is None
+                  else max_new_tokens)
+        self.pending.append(_Request(rid, np.asarray(prompt, np.int32),
+                                     budget))
         return rid
 
-    def run(self) -> dict[int, list[int]]:
-        """Drain the queue, n_slots at a time (simple generational refill —
-        per-slot cache splicing is noted as the production extension).
+    # ------------------------------------------------------------ slot path
 
-        Waves are bucketed by prompt length: left-padding unequal
-        prompts would pour pad tokens into the KV cache (prefill has no
-        pad mask and causal attention attends to them), corrupting every
-        short request in the wave.  Equal-length grouping keeps prefill
-        exact at the cost of occasionally under-full waves.
-        """
+    @staticmethod
+    def _bucket(n: int) -> int:
+        b = 8
+        while b < n:
+            b *= 2
+        return b
+
+    def _prefill_request(self, req: _Request):
+        """Single-request pad-masked prefill at a bucketed length; returns
+        (first sampled token, batch-1 cache)."""
+        L = len(req.prompt)
+        sb = min(max(self._bucket(L), L), self.scfg.max_seq)
+        toks = np.zeros((1, sb), np.int32)
+        mask = np.zeros((1, sb), bool)
+        toks[0, sb - L:] = req.prompt
+        mask[0, sb - L:] = True
+        logits, cache = self.engine._prefill_padded(
+            self.params, jnp.asarray(toks), jnp.asarray(mask))
+        self.stats["prefills"] += 1
+        tok = self.engine.sample(logits, np.asarray([req.rid]),
+                                 np.zeros(1, np.int64))
+        return int(np.asarray(tok)[0]), cache
+
+    def run(self, on_token: Optional[Callable[[int, int], None]] = None
+            ) -> dict[int, list[int]]:
+        """Serve the queue to completion; returns {rid: tokens} (tokens end
+        at EOS inclusive, or at the request's budget).  ``on_token(rid,
+        token)`` streams every generated token as it is sampled."""
+        b = self.n_slots
+        eos = self.scfg.eos_id
+        cache = init_cache(self.cfg, b, self.scfg.max_seq)
+        cur = np.zeros(b, np.int32)
+        slots: list[Optional[_Slot]] = [None] * b
+        emitted: dict[int, list[int]] = {}
+
+        def emit(rid, tok):
+            emitted[rid].append(tok)
+            self.stats["generated_tokens"] += 1
+            if on_token is not None:
+                on_token(rid, tok)
+
+        while True:
+            # per-slot admission: refill every free slot before stepping
+            for i in range(b):
+                while slots[i] is None and self.pending:
+                    req = self.pending.popleft()
+                    if req.budget <= 0:
+                        self.results[req.rid] = []
+                        continue
+                    tok, slot_cache = self._prefill_request(req)
+                    emitted[req.rid] = []
+                    emit(req.rid, tok)
+                    if (eos >= 0 and tok == eos) or req.budget <= 1:
+                        self.results[req.rid] = emitted.pop(req.rid)
+                        continue        # retired at its first token
+                    cache = self._splice(cache, slot_cache, np.int32(i))
+                    cur[i] = tok
+                    slots[i] = _Slot(req.rid, req.budget, 1)
+            active = [i for i in range(b) if slots[i] is not None]
+            if not active:
+                break
+
+            # one fixed-width decode step for every slot (idle rows ride
+            # along; their samples are discarded)
+            logits, cache = self.engine._decode(self.params,
+                                                jnp.asarray(cur), cache)
+            self.stats["decode_steps"] += 1
+            self.stats["slot_steps"] += len(active)
+            rids = np.asarray([s.rid if s else 0 for s in slots])
+            steps = np.asarray([s.n_gen if s else 0 for s in slots])
+            toks = np.asarray(self.engine.sample(logits, rids, steps))
+            for i in active:
+                s = slots[i]
+                tok = int(toks[i])
+                cur[i] = tok
+                s.n_gen += 1
+                emit(s.rid, tok)
+                if (eos >= 0 and tok == eos) or s.n_gen >= s.budget:
+                    self.results[s.rid] = emitted.pop(s.rid)
+                    slots[i] = None
+        return self.results
+
+    # --------------------------------------------------- generational baseline
+
+    def run_generational(self) -> dict[int, list[int]]:
+        """The pre-splice baseline, kept for utilization benchmarking:
+        drain the queue in equal-length waves of ``n_slots`` (bucketed by
+        prompt length so prefill stays exact without a pad mask).  Every
+        wave decodes the full ``max_new_tokens`` budget even after its
+        short requests finish — the idle-slot waste the slot-level loop
+        removes."""
         while self.pending:
-            by_len: dict[int, list[tuple[int, np.ndarray]]] = {}
-            for rid, p in self.pending:
-                by_len.setdefault(len(p), []).append((rid, p))
-            self.pending = []
+            by_len: dict[int, list[_Request]] = {}
+            while self.pending:
+                req = self.pending.popleft()
+                by_len.setdefault(len(req.prompt), []).append(req)
             for _, group in sorted(by_len.items()):
-                for i in range(0, len(group), self.n_slots):
-                    wave = group[i: i + self.n_slots]
-                    toks = np.stack([p for _, p in wave]).astype(np.int32)
-                    gen = self.engine.generate(jnp.asarray(toks))
-                    for j, (rid, _) in enumerate(wave):
-                        seq = gen[j].tolist()
+                for j in range(0, len(group), self.n_slots):
+                    wave = group[j: j + self.n_slots]
+                    toks = np.stack([r.prompt for r in wave]).astype(np.int32)
+                    rids = np.asarray([r.rid for r in wave])
+                    gen = self.engine.generate(jnp.asarray(toks),
+                                               request_ids=rids)
+                    self.stats["prefills"] += 1
+                    self.stats["decode_steps"] += self.scfg.max_new_tokens - 1
+                    self.stats["slot_steps"] += \
+                        len(wave) * (self.scfg.max_new_tokens - 1)
+                    for r, seq in zip(wave, gen):
+                        seq = seq.tolist()[: r.budget]
                         if self.scfg.eos_id >= 0 and self.scfg.eos_id in seq:
                             seq = seq[: seq.index(self.scfg.eos_id) + 1]
-                        self.results[rid] = seq
+                        self.stats["generated_tokens"] += len(seq)
+                        self.results[r.rid] = seq
         return self.results

@@ -182,6 +182,7 @@ def test_trace_vmapped_scales_call_counts():
     assert [r.calls for r in records] == [6]    # 3 experts x batch 2
 
 
+@pytest.mark.slow
 def test_trace_counts_scanned_layers_at_model_scale():
     """The lax.scan over stacked layer params traces one body; the energy
     trace must still count every layer's MVMs."""

@@ -43,7 +43,8 @@ def test_exact_when_n_255(coding, ba, bx):
 
 
 @pytest.mark.parametrize("coding", CODINGS)
-@pytest.mark.parametrize("adaptive", [False, True])
+@pytest.mark.parametrize("adaptive", [
+    False, pytest.param(True, marks=pytest.mark.slow)])
 def test_fast_path_equals_cell_physics(coding, adaptive):
     """The GEMM identity path == the capacitor-level CIMA model, including
     ADC quantization, banking, and sparsity masking."""
@@ -89,6 +90,7 @@ def test_banking_is_the_quantization_boundary():
     assert err(2304) < err(4608)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1),
        n=st.integers(10, 255),

@@ -54,7 +54,7 @@ def test_xnor_grid_has_zero():
         assert n_levels(bits, Coding.XNOR) == 2 ** (bits - 1) + 1
 
 
-@settings(max_examples=50, deadline=None)
+@settings(max_examples=15, deadline=None)
 @given(
     bits=st.integers(2, 8),
     coding=st.sampled_from(CODINGS),

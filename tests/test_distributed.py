@@ -70,6 +70,7 @@ def test_param_rules():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     """The distributed invariant: identical loss on 1 vs 8 devices."""
     code = """

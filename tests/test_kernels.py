@@ -30,20 +30,24 @@ def _ops(coding, ba, bx, n, m, batch, sparsity=0.3, seed=0):
     return jnp.asarray(x, jnp.float32), jnp.asarray(w, jnp.float32)
 
 
+# tier-1 keeps one XNOR and one AND case; the full shape sweep is `slow`
 CIMA_CASES = [
-    # (coding, ba, bx, n, m, bank_n, block_b, block_m)
-    (Coding.XNOR, 4, 4, 300, 40, 2304, 8, 16),
-    (Coding.XNOR, 1, 1, 256, 32, 2304, 16, 32),
-    (Coding.XNOR, 2, 3, 512, 16, 256, 8, 16),     # multi-bank + padding
-    (Coding.XNOR, 8, 8, 100, 8, 2304, 8, 8),
-    (Coding.XNOR, 4, 2, 2400, 24, 2304, 8, 8),    # > one chip bank
-    (Coding.AND, 4, 4, 300, 40, 2304, 8, 16),
-    (Coding.AND, 2, 2, 512, 16, 128, 8, 16),
-    (Coding.AND, 6, 3, 700, 12, 512, 4, 4),
+    # (coding, ba, bx, n, m, bank_n, block_b, block_m, fast)
+    (Coding.XNOR, 4, 4, 300, 40, 2304, 8, 16, True),
+    (Coding.XNOR, 1, 1, 256, 32, 2304, 16, 32, False),
+    (Coding.XNOR, 2, 3, 512, 16, 256, 8, 16, False),   # multi-bank + padding
+    (Coding.XNOR, 8, 8, 100, 8, 2304, 8, 8, False),
+    (Coding.XNOR, 4, 2, 2400, 24, 2304, 8, 8, False),  # > one chip bank
+    (Coding.AND, 4, 4, 300, 40, 2304, 8, 16, False),
+    (Coding.AND, 2, 2, 512, 16, 128, 8, 16, True),
+    (Coding.AND, 6, 3, 700, 12, 512, 4, 4, False),
 ]
 
 
-@pytest.mark.parametrize("coding,ba,bx,n,m,bank_n,bb,bm", CIMA_CASES)
+@pytest.mark.parametrize(
+    "coding,ba,bx,n,m,bank_n,bb,bm",
+    [pytest.param(*c[:8], marks=[] if c[8] else pytest.mark.slow)
+     for c in CIMA_CASES])
 def test_cima_mvm_matches_oracle(coding, ba, bx, n, m, bank_n, bb, bm):
     x, w = _ops(coding, ba, bx, n, m, batch=5)
     cfg = BpbsConfig(ba=ba, bx=bx, coding=coding, bank_n=bank_n)
@@ -52,6 +56,7 @@ def test_cima_mvm_matches_oracle(coding, ba, bx, n, m, bank_n, bb, bm):
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("adaptive", [False, True])
 def test_cima_mvm_adaptive_range(adaptive):
     x, w = _ops(Coding.XNOR, 4, 4, 600, 16, batch=4, sparsity=0.6)
@@ -68,6 +73,7 @@ def test_cima_mvm_ideal_adc_is_exact_gemm():
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(x @ w), atol=1e-3)
 
 
+@pytest.mark.slow
 def test_cima_mvm_leading_batch_dims():
     x, w = _ops(Coding.XNOR, 2, 2, 128, 8, batch=6)
     x = x.reshape(2, 3, 128)
@@ -78,6 +84,7 @@ def test_cima_mvm_leading_batch_dims():
     np.testing.assert_allclose(np.asarray(y), np.asarray(y_r), atol=1e-3)
 
 
+@pytest.mark.slow
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 10_000), ba=st.integers(1, 6), bx=st.integers(1, 6),
        n=st.sampled_from([64, 255, 300]), m=st.sampled_from([8, 24]))

@@ -1,0 +1,88 @@
+"""Property test: pad-masked prefill of a LEFT-padded prompt must match
+the unpadded prefill — logits, cache tail, and per-slot position — for
+random lengths and pad amounts, across an attention arch and an SSM arch
+(the two cache families: KV tensors vs recurrent states)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from hyp_compat import given, settings, st
+
+from repro.configs import get_config
+from repro.models import init_params, prefill, slice_slot
+
+KEY = jax.random.PRNGKey(0)
+S_MAX = 32
+
+_CACHE = {}
+
+
+def _arch(name):
+    if name not in _CACHE:
+        cfg = get_config(name).reduced()
+        _CACHE[name] = (cfg, init_params(cfg, KEY, max_seq=64))
+    return _CACHE[name]
+
+
+@settings(max_examples=8, deadline=None)
+@given(name=st.sampled_from(["llama3.2-1b", "mamba2-130m"]),
+       length=st.integers(min_value=1, max_value=15),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_padded_prefill_matches_unpadded(name, length, seed):
+    cfg, params = _arch(name)
+    rng = np.random.default_rng(seed)
+    prompt = rng.integers(1, cfg.vocab, (1, length)).astype(np.int32)
+
+    lg_ref, cache_ref = prefill(params, jnp.asarray(prompt), cfg,
+                                s_max=S_MAX)
+
+    # fixed padded width (one compiled shape): pad = 16 - length, 1..15
+    pad = 16 - length
+    padded = np.zeros((1, 16), np.int32)
+    mask = np.zeros((1, 16), bool)
+    padded[0, pad:] = prompt[0]
+    mask[0, pad:] = True
+    lg_pad, cache_pad = prefill(params, jnp.asarray(padded), cfg,
+                                s_max=S_MAX, pad_mask=jnp.asarray(mask))
+
+    np.testing.assert_allclose(np.asarray(lg_pad), np.asarray(lg_ref),
+                               atol=3e-5)
+    # the caches agree in full: valid entries are left-aligned identically
+    # and invalid tail slots are zero in both
+    a, b = slice_slot(cache_pad, 0), slice_slot(cache_ref, 0)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    assert int(a.pos[0]) == length
+    for la, lb in zip(jax.tree_util.tree_leaves(a.layers),
+                      jax.tree_util.tree_leaves(b.layers)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=3e-5)
+
+
+def test_padded_prefill_batches_ragged_rows_exactly():
+    """Several ragged rows padded into ONE batch must each match their own
+    solo unpadded prefill (the admission path of the slot batcher)."""
+    for name in ("llama3.2-1b", "mamba2-130m"):
+        cfg, params = _arch(name)
+        rng = np.random.default_rng(0)
+        lens = [2, 7, 12]
+        s = max(lens)
+        padded = np.zeros((len(lens), s), np.int32)
+        mask = np.zeros((len(lens), s), bool)
+        rows = [rng.integers(1, cfg.vocab, (l,)).astype(np.int32)
+                for l in lens]
+        for i, (l, r) in enumerate(zip(lens, rows)):
+            padded[i, s - l:] = r
+            mask[i, s - l:] = True
+        lg, cache = prefill(params, jnp.asarray(padded), cfg, s_max=S_MAX,
+                            pad_mask=jnp.asarray(mask))
+        for i, (l, r) in enumerate(zip(lens, rows)):
+            lg_ref, cache_ref = prefill(params, jnp.asarray(r[None]), cfg,
+                                        s_max=S_MAX)
+            np.testing.assert_allclose(np.asarray(lg[i]),
+                                       np.asarray(lg_ref[0]), atol=3e-5)
+            sl = slice_slot(cache, i)
+            assert int(sl.pos[0]) == l
+            for la, lb in zip(jax.tree_util.tree_leaves(sl.layers),
+                              jax.tree_util.tree_leaves(cache_ref.layers)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           atol=3e-5)

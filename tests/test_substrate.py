@@ -99,6 +99,7 @@ def _tiny_setup(tmp_path, total_steps, crash_at=None, seed=11):
     return cfg, data_cfg, opt_cfg, tcfg
 
 
+@pytest.mark.slow
 def test_trainer_crash_and_resume_is_bitwise(tmp_path):
     """Kill the job mid-run; the resumed run must land on the SAME final
     loss as an uninterrupted run (deterministic data + idempotent steps)."""
@@ -131,6 +132,7 @@ def test_trainer_loss_decreases(tmp_path):
     assert last < first, (first, last)
 
 
+@pytest.mark.slow
 def test_serving_engine_greedy_matches_manual():
     from repro.models import decode_step, init_params, prefill
     from repro.serve.engine import Engine, ServeConfig
@@ -169,6 +171,7 @@ def test_continuous_batcher_drains_queue():
     assert all(len(v) == 4 for v in results.values())
 
 
+@pytest.mark.slow
 def test_continuous_batcher_unequal_lengths_are_not_polluted():
     """Batched ragged prompts must decode exactly what each prompt decodes
     alone.  The old left-padding path fed pad tokens into prefill with no
