@@ -11,9 +11,19 @@ One chip-shaped MVM dispatched through every registered backend:
 
 plus the serving analog of keeping the array busy: a ragged-traffic
 utilization benchmark of slot-level continuous batching vs the
-generational-wave baseline (tokens per model step).
+generational-wave baseline (tokens per model step), and the
+weight-stationary decode benchmark (``run_decode_cached``): ms/step of
+program-cached vs on-the-fly decode on the quantized backends, written to
+machine-readable ``BENCH_decode.json`` (the CI fast job uploads it as an
+artifact).
+
+CLI:  PYTHONPATH=src python -m benchmarks.accel_bench \
+          [--decode-json BENCH_decode.json] [--decode-only]
 """
 from __future__ import annotations
+
+import json
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -72,9 +82,71 @@ def run_ragged_traffic(n_slots: int = 4, n_requests: int = 12,
     return {"ratio": ratio, "slot": st_s, "generational": st_g}
 
 
+def run_decode_cached(json_path: str = "BENCH_decode.json",
+                      backends=("digital_int", "bpbs"),
+                      batch: int = 4, steps: int = 8,
+                      prompt_len: int = 16) -> dict:
+    """Weight-stationary decode: ms/step with the compiled CIMA program
+    (weights quantized/decomposed ONCE at engine init) vs the on-the-fly
+    path (every decode step re-quantizes every projection).
+
+    Emits CSV rows and writes a machine-readable JSON: per backend
+    ``ms_per_step_cached`` / ``ms_per_step_uncached`` / ``speedup`` plus
+    ``tokens_per_step`` (= batch: one token per slot per step).
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg0 = get_config("olmo-1b").reduced()
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(1, cfg0.vocab, (batch, prompt_len)),
+                          jnp.int32)
+    scfg = ServeConfig(max_seq=prompt_len + steps + 4, max_new_tokens=steps)
+    results: dict = {"model": "olmo-1b.reduced", "tokens_per_step": batch,
+                     "decode_steps_timed": steps, "backends": {}}
+    for backend in backends:
+        cfg = cfg0.with_accel(backend, ba=4, bx=4)
+        params = init_params(cfg, jax.random.PRNGKey(0),
+                             max_seq=scfg.max_seq)
+        row: dict = {}
+        for cached in (True, False):
+            eng = Engine(params, cfg,
+                         dataclasses.replace(scfg, use_program=cached))
+            logits, cache = eng._prefill(eng.params, prompts, None)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            for _ in range(2):                         # compile + warm
+                logits, cache = eng._decode(eng.params, tok, cache)
+            jax.block_until_ready(logits)
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                logits, cache = eng._decode(eng.params, tok, cache)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            jax.block_until_ready(tok)
+            ms = (time.perf_counter() - t0) * 1e3 / steps
+            row["ms_per_step_cached" if cached else
+                "ms_per_step_uncached"] = ms
+        row["speedup"] = row["ms_per_step_uncached"] / \
+            max(row["ms_per_step_cached"], 1e-9)
+        results["backends"][backend] = row
+        emit(f"decode_program_{backend}", row["ms_per_step_cached"] * 1e3,
+             f"uncached_ms={row['ms_per_step_uncached']:.2f};"
+             f"cached_ms={row['ms_per_step_cached']:.2f};"
+             f"speedup={row['speedup']:.2f}x;tokens_per_step={batch}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
 def run():
     run_ragged_traffic()
     _run_backends()
+    run_decode_cached()
 
 
 def _run_backends():
@@ -108,3 +180,19 @@ def _run_backends():
     emit("accel_energy_trace", 0.0,
          f"mvms={sum(r.calls for r in records)};"
          f"pj={es['total_pj']:.3g};cycles={es['total_cycles']}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--decode-json", default="BENCH_decode.json",
+                    help="output path for the decode program benchmark")
+    ap.add_argument("--decode-only", action="store_true",
+                    help="run only the cached-vs-uncached decode benchmark")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if not args.decode_only:
+        run_ragged_traffic()
+        _run_backends()
+    run_decode_cached(json_path=args.decode_json)

@@ -22,6 +22,13 @@ target.  This package is that interface at framework scale:
   spec the compute uses.
 * :mod:`repro.accel.dispatch` — :func:`matmul`, the single entry point
   every weight-bearing projection in :mod:`repro.models` goes through.
+* :mod:`repro.accel.program`  — weight-stationary CIMA programs:
+  :func:`build_program` compiles every managed projection into a
+  :class:`CimaImage` (int8 bit planes, the kernel's ``[N, B_A, M]``
+  layout) once, a capacity-aware bank allocator places images on
+  ``capacity_chips`` 590kb arrays and schedules reloads for the
+  overflow, and :func:`install_program` threads the images through the
+  param pytree so serving decode never re-quantizes a weight.
 
 Quick start::
 
@@ -43,6 +50,8 @@ from .context import (ExecContext, MvmRecord, adc_noise, energy_summary,
                       override, trace, vmapped)
 from .dispatch import matmul
 from .policy import DIGITAL, PrecisionPolicy
+from .program import (CimaImage, CimaProgram, ProgramManager, build_program,
+                      install_program, strip_program)
 from .registry import get_backend, list_backends, register_backend
 from .spec import ExecSpec
 
@@ -52,4 +61,6 @@ __all__ = [
     "ExecSpec", "PrecisionPolicy", "DIGITAL", "ExecContext", "MvmRecord",
     "matmul", "override", "trace", "vmapped", "adc_noise", "energy_summary",
     "register_backend", "get_backend", "list_backends",
+    "CimaImage", "CimaProgram", "ProgramManager", "build_program",
+    "install_program", "strip_program",
 ]

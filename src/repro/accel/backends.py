@@ -1,10 +1,17 @@
 """Built-in execution backends.
 
 Every quantizing backend shares one operand-quantization discipline
-(:func:`quantize_operands` / :func:`rescale`), so ``digital_int`` is the
-bit-true reference for ``bpbs``/``bpbs_ref``/``pallas`` by construction:
-they consume identical integer grids and differ only in how the integer
-MVM itself is evaluated.
+(:func:`quantize_input` / :func:`weight_grid` / :func:`rescale`), so
+``digital_int`` is the bit-true reference for ``bpbs``/``bpbs_ref``/
+``pallas`` by construction: they consume identical integer grids and
+differ only in how the integer MVM itself is evaluated.
+
+Weight-stationary serving: when ``ctx.image`` carries a compiled
+:class:`~repro.accel.program.CimaImage`, the weight side comes from the
+stored bit planes (a transpose/recombination of exact small integers —
+bit-identical to quantizing on the fly) and **zero** per-call
+``quantize``/``weight_planes`` ops run.  The input side is dynamic and
+still quantizes per call, exactly as the chip streams activations.
 """
 from __future__ import annotations
 
@@ -13,7 +20,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.bpbs import bpbs_matmul_int, bpbs_matmul_int_reference
+from repro.core.bpbs import (bpbs_matmul_planes, bpbs_matmul_planes_reference,
+                             weight_planes)
 from repro.core.quant import QTensor, quantize
 
 from .context import ExecContext
@@ -21,9 +29,8 @@ from .registry import register_backend
 from .spec import ExecSpec
 
 
-def quantize_operands(x: jax.Array, w: jax.Array,
-                      spec: ExecSpec) -> tuple[QTensor, QTensor]:
-    """Quantize both operands onto the spec's coding grids.
+def quantize_input(x: jax.Array, spec: ExecSpec) -> QTensor:
+    """Quantize the (dynamic) input operand onto the spec's coding grid.
 
     The paper's C_x discipline at TP scale: any cross-device regather of
     the activations happens on the quantized int8 values (B_X bits on the
@@ -33,16 +40,60 @@ def quantize_operands(x: jax.Array, w: jax.Array,
 
     qx = quantize(x, spec.bx, spec.coding)
     q_int = cs(qx.q.astype(jnp.int8), ("dp",))
-    qx = dataclasses.replace(qx, q=q_int)
+    return dataclasses.replace(qx, q=q_int)
+
+
+def weight_grid(w: jax.Array, spec: ExecSpec,
+                ctx: ExecContext) -> QTensor:
+    """The weight operand on the spec's integer grid.
+
+    Program path: the image's stored int16 grid casts straight to f32
+    (exact small integers; zero quantize ops).  Fallback: quantize per
+    call.
+    """
+    img = ctx.image
+    if img is not None:
+        return QTensor(img.wq.astype(jnp.float32), img.scale,
+                       spec.ba, spec.coding)
+    return quantize(w, spec.ba, spec.coding,
+                    axis=1 if spec.per_channel else None)
+
+
+def weight_planes_for(w: jax.Array, spec: ExecSpec,
+                      ctx: ExecContext) -> tuple[jax.Array, jax.Array]:
+    """``(ws [N, B_A, M], scale)`` for the plane-consuming backends.
+
+    Program path: the image's planes in the kernel layout, widened to
+    f32 in one pass.  (Measured on CPU XLA, one upfront int8->f32 cast
+    beats feeding int8 straight into the per-bank bf16 GEMMs by ~1.6x —
+    the element-wise widening fuses poorly inside the bank loop.  The
+    ``pallas`` backend is the true 1-byte-per-plane-element streaming
+    path: it consumes the stored int8 image directly and casts in-tile.)
+    Fallback: quantize + decompose + transpose per call.
+    """
+    img = ctx.image
+    if img is not None:
+        return img.ws.astype(jnp.float32), img.scale
+    qw = quantize(w, spec.ba, spec.coding,
+                  axis=1 if spec.per_channel else None)
+    return jnp.transpose(weight_planes(qw.q, spec.bpbs()), (0, 2, 1)), \
+        qw.scale
+
+
+def quantize_operands(x: jax.Array, w: jax.Array,
+                      spec: ExecSpec) -> tuple[QTensor, QTensor]:
+    """Quantize both operands onto the spec's coding grids (the on-the-fly
+    path; kept for external callers)."""
+    qx = quantize_input(x, spec)
     qw = quantize(w, spec.ba, spec.coding,
                   axis=1 if spec.per_channel else None)
     return qx, qw
 
 
-def rescale(y_int: jax.Array, qx: QTensor, qw: QTensor,
+def rescale(y_int: jax.Array, x_scale: jax.Array, w_scale: jax.Array,
             spec: ExecSpec) -> jax.Array:
-    scale_w = qw.scale if not spec.per_channel else qw.scale.reshape(1, -1)
-    return y_int * qx.scale * scale_w
+    sw = w_scale if not spec.per_channel else w_scale.reshape(1, -1)
+    return y_int * x_scale * sw
 
 
 @register_backend("digital")
@@ -56,28 +107,31 @@ def digital(x: jax.Array, w: jax.Array, spec: ExecSpec,
 def digital_int(x: jax.Array, w: jax.Array, spec: ExecSpec,
                 ctx: ExecContext) -> jax.Array:
     """Bit-true integer compute at (B_A, B_X) — the Fig. 11 "ideal"."""
-    qx, qw = quantize_operands(x, w, spec)
+    qx = quantize_input(x, spec)
+    qw = weight_grid(w, spec, ctx)
     y_int = jnp.einsum("...n,nm->...m", qx.q.astype(jnp.float32),
                        qw.q.astype(jnp.float32))
-    return rescale(y_int, qx, qw, spec)
+    return rescale(y_int, qx.scale, qw.scale, spec)
 
 
 @register_backend("bpbs")
 def bpbs(x: jax.Array, w: jax.Array, spec: ExecSpec,
          ctx: ExecContext) -> jax.Array:
     """Mixed-signal BP/BS pipeline, fast GEMM-identity path."""
-    qx, qw = quantize_operands(x, w, spec)
-    y_int = bpbs_matmul_int(qx.q, qw.q, spec.bpbs(), ctx.key)
-    return rescale(y_int, qx, qw, spec)
+    qx = quantize_input(x, spec)
+    ws, w_scale = weight_planes_for(w, spec, ctx)
+    y_int = bpbs_matmul_planes(qx.q, ws, spec.bpbs(), ctx.key)
+    return rescale(y_int, qx.scale, w_scale, spec)
 
 
 @register_backend("bpbs_ref")
 def bpbs_ref(x: jax.Array, w: jax.Array, spec: ExecSpec,
              ctx: ExecContext) -> jax.Array:
     """Cell-by-cell charge-share physics (slow; validation only)."""
-    qx, qw = quantize_operands(x, w, spec)
-    y_int = bpbs_matmul_int_reference(qx.q, qw.q, spec.bpbs())
-    return rescale(y_int, qx, qw, spec)
+    qx = quantize_input(x, spec)
+    ws, w_scale = weight_planes_for(w, spec, ctx)
+    y_int = bpbs_matmul_planes_reference(qx.q, ws, spec.bpbs())
+    return rescale(y_int, qx.scale, w_scale, spec)
 
 
 @register_backend("pallas")
@@ -86,7 +140,15 @@ def pallas(x: jax.Array, w: jax.Array, spec: ExecSpec,
     """The Pallas TPU kernel (interpret mode on CPU unless overridden)."""
     from repro.kernels import ops as kernel_ops
 
-    qx, qw = quantize_operands(x, w, spec)
+    qx = quantize_input(x, spec)
+    img = ctx.image
+    if img is not None:
+        # the image already stores the kernel's [N, BA, M] int8 layout
+        y_int = kernel_ops.cima_mvm_from_planes(qx.q, img.ws, spec.bpbs(),
+                                                interpret=spec.interpret)
+        return rescale(y_int, qx.scale, img.scale, spec)
+    qw = quantize(w, spec.ba, spec.coding,
+                  axis=1 if spec.per_channel else None)
     y_int = kernel_ops.cima_mvm(qx.q, qw.q, spec.bpbs(),
                                 interpret=spec.interpret)
-    return rescale(y_int, qx, qw, spec)
+    return rescale(y_int, qx.scale, qw.scale, spec)

@@ -29,6 +29,10 @@ class ExecContext:
     """Runtime state threaded into a backend call."""
 
     key: Optional[jax.Array] = None     # PRNG key for ADC noise sampling
+    # compiled weight image for this projection (repro.accel.program):
+    # when armed, the backend consumes precompiled bit planes instead of
+    # quantizing the weight operand — the weight-stationary serving path
+    image: Optional[object] = None      # CimaImage | None
 
 
 # ------------------------------------------------------------- overrides
@@ -74,7 +78,18 @@ def current_override() -> dict:
 
 @dataclasses.dataclass(frozen=True)
 class MvmRecord:
-    """One dispatched MVM: the resolved spec plus its static shape."""
+    """One dispatched MVM: the resolved spec plus its static shape.
+
+    ``program`` marks dispatches served from a compiled
+    :class:`~repro.accel.program.CimaImage` (zero weight quantize /
+    plane-decompose ops).  ``loads``/``load_segments`` charge the
+    weight-stationary model's reload schedule: a dispatch whose image is
+    *streamed* (not resident under the allocator's capacity) rewrites
+    ``load_segments`` 768-b row segments per image copy; ``loads`` counts
+    copies and is scaled by :func:`vmapped` exactly like ``calls``
+    (scanned layers / experts are separate array loads, batch rows are
+    not).
+    """
 
     tag: str          # the layer path the policy resolved (spec.tag)
     backend: str
@@ -83,6 +98,9 @@ class MvmRecord:
     ba: int
     bx: int
     calls: int        # number of row-vector MVMs (prod of leading dims)
+    program: bool = False   # served from a compiled weight image?
+    loads: int = 0          # image-copy reloads charged to this dispatch
+    load_segments: int = 0  # 768-b row segments per reload
 
 
 _TRACE_STACK: list[list] = []
@@ -122,7 +140,8 @@ def record(rec: MvmRecord) -> None:
     if not _TRACE_STACK:
         return
     for n in _CALL_SCALE_STACK:
-        rec = dataclasses.replace(rec, calls=rec.calls * n)
+        rec = dataclasses.replace(rec, calls=rec.calls * n,
+                                  loads=rec.loads * n)
     for buf in _TRACE_STACK:
         buf.append(rec)
 
@@ -167,27 +186,52 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     """Chip-model cost of a traced run, from :mod:`repro.core.energy`.
 
     Digital records are counted (``mvms``) but carry no accelerator
-    energy — they never touched the CIMU.  Returns totals plus a per-tag
-    breakdown (energy in pJ, CIMU cycles).
+    energy — they never touched the CIMU.  Dispatches whose weight image
+    is *streamed* (over the bank allocator's capacity) additionally
+    charge the matrix (re)load: ``load_segments`` 768-b row segments per
+    image copy, DMA-bound at ``max(C_A, C_LOAD)`` cycles and
+    ``A_ROW_SEGMENT / DMA_WORD`` DMA words each (paper Fig. 8's ~18k-
+    cycle full-array reload).  Returns totals plus a per-tag breakdown
+    (energy in pJ, CIMU cycles, reload cycles).
     """
     from repro.core import energy as E
+    from .program import segment_cycles, segment_dma_words
+
+    # one definition of the per-segment load cost, shared with the
+    # allocator's reload schedule (CimaProgram.reload_cycles_per_pass)
+    seg_cycles = segment_cycles()
+    seg_words = segment_dma_words()
+    e_dma = E.ENERGY_PJ[vdd]["dma_32b"]
 
     by_tag: dict[str, dict] = {}
     total_pj = 0.0
     total_cycles = 0
+    load_pj = 0.0
+    load_cycles = 0
     for r in records:
         row = by_tag.setdefault(
             r.tag or r.backend,
-            {"backend": r.backend, "mvms": 0, "pj": 0.0, "cycles": 0})
+            {"backend": r.backend, "mvms": 0, "pj": 0.0, "cycles": 0,
+             "load_cycles": 0})
         row["mvms"] += r.calls
         if r.backend == "digital":
             continue
         shape = E.MvmShape(n=r.n, m=r.m, ba=r.ba, bx=r.bx)
         pj = E.mvm_energy_pj(shape, vdd, sparsity, readout)["total"] * r.calls
         cyc = E.mvm_cycles(shape, readout) * r.calls
+        if r.loads:
+            segs = r.loads * r.load_segments
+            lc = segs * seg_cycles
+            lp = segs * seg_words * e_dma
+            row["load_cycles"] += lc
+            load_cycles += lc
+            load_pj += lp
+            pj += lp
+            cyc += lc
         row["pj"] += pj
         row["cycles"] += cyc
         total_pj += pj
         total_cycles += cyc
     return {"total_pj": total_pj, "total_cycles": total_cycles,
+            "load_pj": load_pj, "load_cycles": load_cycles,
             "by_tag": by_tag}

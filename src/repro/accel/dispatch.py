@@ -6,6 +6,19 @@ roofline tracing, and dispatches to the registered backend.  Non-digital
 backends get straight-through-estimator (STE) gradients — the backward
 pass is that of the plain float GEMM, which is what quantization-aware
 training of the paper's CIFAR networks uses.
+
+When the caller supplies a compiled weight ``image`` (a
+:class:`~repro.accel.program.CimaImage`, threaded through the param tree
+by :func:`~repro.accel.program.install_program`), the dispatcher
+validates it against the *resolved* spec — so a scoped
+``override(backend=...)`` keeps the image (all quantizing backends share
+one weight grid) while an ``override(ba=...)`` correctly drops back to
+on-the-fly quantization — and hands it to the backend through
+``ExecContext``.  The program path keeps the same STE gradients as the
+on-the-fly path (the custom_vjp operands are the float master operands;
+the image's integer planes are non-differentiable closure constants) —
+training still never installs images, because a compiled image is a
+*stale snapshot* the moment the optimizer moves the weights.
 """
 from __future__ import annotations
 
@@ -22,14 +35,19 @@ from .registry import get_backend
 from .spec import ExecSpec
 
 
-def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array) -> None:
+def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
+                image=None) -> None:
     if not tracing():
         return
+    streamed = image is not None and not image.resident
     record(MvmRecord(
         tag=spec.tag, backend=spec.backend,
         n=int(w.shape[0]), m=int(w.shape[1]),
         ba=spec.ba, bx=spec.bx,
         calls=int(math.prod(x.shape[:-1])),
+        program=image is not None,
+        loads=1 if streamed else 0,
+        load_segments=image.segments if streamed else 0,
     ))
 
 
@@ -40,6 +58,7 @@ def matmul(
     ctx: Optional[ExecContext] = None,
     *,
     dtype=None,
+    image=None,
 ) -> jax.Array:
     """``x @ w`` under ``spec``'s execution backend.
 
@@ -50,6 +69,11 @@ def matmul(
       returns that dtype.
     * Any other backend quantizes per its spec, computes in float32 with
       STE gradients, and returns float32 — callers cast.
+    * ``image`` (optional): this projection's compiled
+      :class:`~repro.accel.program.CimaImage`.  If it matches the
+      resolved spec, the backend consumes its bit planes instead of
+      quantizing ``w`` — bit-for-bit the same result, zero weight
+      quantize/decompose ops, and the same STE gradients.
     """
     if spec is None:
         dt = dtype or x.dtype
@@ -58,11 +82,18 @@ def matmul(
     ov = current_override()
     if ov:
         spec = dataclasses.replace(spec, **ov)
-    _record_mvm(spec, x, w)
+
+    from .program import image_matches
+
+    if image is not None and not image_matches(image, spec, w):
+        image = None
+    _record_mvm(spec, x, w, image)
 
     fn = get_backend(spec.backend)
     if ctx is None:
         ctx = ExecContext(key=next_noise_key())
+    if image is not None:
+        ctx = dataclasses.replace(ctx, image=image)
     if spec.is_digital:
         # digital computes at the caller's dtype and takes no STE wrapper,
         # but still goes through the registry so a re-registered "digital"

@@ -1,0 +1,450 @@
+"""Weight-stationary CIMA programs: compile-once bit-plane images plus a
+capacity-aware bank allocator (paper Fig. 8; DESIGN.md §8).
+
+The chip is weight-stationary: matrix elements are written into the 590kb
+CIMA once (a full-array reload costs ~18k cycles) and every MVM reuses
+them.  The execution backends mirror that here: :func:`build_program`
+walks a model's params under its :class:`~repro.accel.policy.
+PrecisionPolicy` once, quantizes every managed projection onto its spec's
+coding grid, and decomposes it into the kernel's ``[N, B_A, M]`` int8
+bit-plane layout — a :class:`CimaImage` per projection.  :func:`
+install_program` threads each image into the param pytree right next to
+the weight it was compiled from, so ``lax.scan`` over stacked layers and
+``vmap`` over MoE experts slice images exactly like they slice weights,
+and dispatch (:mod:`repro.accel.dispatch`) consumes the image through
+``ExecContext`` instead of re-quantizing — zero weight ``quantize``/
+``weight_planes`` ops on the serving hot path, bit-for-bit identical to
+the on-the-fly path by construction.
+
+The **bank allocator** places images onto a virtual array of
+``capacity_chips`` physical CIMAs (2304 rows x 256 columns = 590kb each,
+the paper's macro).  An image of shape [N, M] at B_A bits occupies
+``ceil(N/2304) * ceil(M*B_A/256)`` array tiles per copy (scanned layers
+and experts are separate copies).  Images are placed first-fit in model
+order; whatever exceeds capacity is *streamed*: scheduled for a reload on
+every forward pass, charged through the measured ``C_LOAD``/``C_A``/
+``A_ROW_SEGMENT`` constants of :mod:`repro.core.energy` and surfaced per
+dispatch in :func:`repro.accel.context.trace` records and
+:func:`~repro.accel.context.energy_summary`.
+
+Dispatch keeps the same STE gradients on the program path (the image's
+integer planes are non-differentiable closure constants of the
+custom_vjp), but training still never installs images: a compiled image
+is a stale snapshot the moment the optimizer moves the weights.
+:class:`ProgramManager` owns that freshness contract — the trainer
+invalidates it after every optimizer update and serving/eval rebuilds
+lazily.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import Coding, quantize
+
+# Backends whose weight-side numerics are the shared integer grid of
+# repro.core.quant — a compiled image is valid for ANY of them (that is
+# what lets override(backend=...) flip substrates without recompiling).
+PROGRAM_BACKENDS = ("digital_int", "bpbs", "bpbs_ref", "pallas")
+
+
+# ---------------------------------------------------------------- images
+
+@dataclasses.dataclass
+class CimaImage:
+    """One projection compiled for the CIMA: int8 bit planes + scales.
+
+    ``ws`` is the kernel layout ``[..., N, B_A, M]`` (leading axes are
+    stacked copies: scanned layers, experts); ``wq`` is the same matrix
+    on the integer coding grid (int16 — what ``digital_int`` consumes,
+    avoiding a per-call plane recombination); ``scale`` is the weight
+    quantization scale (``[..., 1, M]`` per-channel or ``[...]``
+    per-tensor).  Static metadata rides in the pytree treedef, so an
+    image sliced by ``scan``/``vmap`` keeps its identity and the
+    dispatcher can validate it against the resolved spec without
+    touching traced values.
+    """
+
+    ws: jax.Array                 # int8 bit planes, [..., N, BA, M]
+    wq: jax.Array                 # int16 integer grid, [..., N, M]
+    scale: jax.Array              # f32 weight scale
+    path: str = ""                # param-tree location (unique program key)
+    tag: str = ""                 # policy path the spec resolved (reporting)
+    ba: int = 4
+    coding: Coding = Coding.XNOR
+    per_channel: bool = True
+    n: int = 0                    # per-copy rows
+    m: int = 0                    # per-copy output columns
+    copies: int = 1               # stacked instances (layers x experts)
+    tiles: int = 0                # 2304x256 array tiles per copy
+    segments: int = 0             # 768-b row segments per copy (load cost)
+    resident: bool = True         # placed in the standing allocation?
+
+
+jax.tree_util.register_dataclass(
+    CimaImage,
+    data_fields=["ws", "wq", "scale"],
+    meta_fields=["path", "tag", "ba", "coding", "per_channel", "n", "m",
+                 "copies", "tiles", "segments", "resident"],
+)
+
+
+def image_tiles(n: int, m: int, ba: int) -> int:
+    """Array tiles (full 2304x256 CIMAs) one [N, M] image copy occupies."""
+    from repro.core import energy as E
+
+    return math.ceil(n / E.CIMA_ROWS) * math.ceil(m * ba / E.CIMA_COLS)
+
+
+def image_segments(n: int, m: int, ba: int) -> int:
+    """768-b row segments written to load one [N, M] image copy.
+
+    Per column tile the loader streams N rows of the 256-b physical row
+    width: ``ceil(N * 256 / 768)`` segments — for a full array exactly the
+    768 segments behind the paper's ~18k-cycle reload
+    (:func:`repro.core.energy.matrix_load_cycles`).
+    """
+    from repro.core import energy as E
+
+    col_tiles = math.ceil(m * ba / E.CIMA_COLS)
+    return col_tiles * math.ceil(n * E.CIMA_COLS / E.A_ROW_SEGMENT)
+
+
+def segment_cycles() -> int:
+    """Cycles per 768-b row segment: DMA-bound at max(C_A, C_LOAD)."""
+    from repro.core import energy as E
+
+    return max(E.C_A, E.C_LOAD)
+
+
+def segment_dma_words() -> int:
+    """32-b DMA words delivered per 768-b row segment."""
+    from repro.core import energy as E
+
+    return E.A_ROW_SEGMENT // E.DMA_WORD
+
+
+def _compile_image(w: jax.Array, spec, path: str) -> CimaImage:
+    """Quantize + decompose one projection (possibly stacked) into planes.
+
+    Applies exactly the per-matrix quantization the on-the-fly backends
+    apply per call (vmapped over stacked copies), so reconstruction at
+    dispatch is bit-identical.
+    """
+    lead = w.shape[:-2]
+    n, m = int(w.shape[-2]), int(w.shape[-1])
+    cfg = spec.bpbs()
+
+    def one(wi):
+        from repro.core.bpbs import weight_planes
+
+        qw = quantize(wi.astype(jnp.float32), spec.ba, spec.coding,
+                      axis=1 if spec.per_channel else None)
+        wp = weight_planes(qw.q, cfg)                     # [N, M, BA]
+        return (jnp.transpose(wp, (0, 2, 1)).astype(jnp.int8),
+                qw.q.astype(jnp.int16), qw.scale)
+
+    if lead:
+        copies = int(math.prod(lead))
+        ws, wq, scale = jax.vmap(one)(w.reshape((copies,) + w.shape[-2:]))
+        ws = ws.reshape(lead + ws.shape[1:])
+        wq = wq.reshape(lead + wq.shape[1:])
+        scale = scale.reshape(lead + scale.shape[1:])
+    else:
+        copies = 1
+        ws, wq, scale = one(w)
+    return CimaImage(
+        ws=ws, wq=wq, scale=scale, path=path, tag=spec.tag, ba=spec.ba,
+        coding=Coding(spec.coding), per_channel=spec.per_channel,
+        n=n, m=m, copies=copies,
+        tiles=image_tiles(n, m, spec.ba),
+        segments=image_segments(n, m, spec.ba),
+    )
+
+
+def image_matches(img: Optional[CimaImage], spec, w: jax.Array) -> bool:
+    """Is ``img`` a valid compiled form of ``w`` under ``spec``?
+
+    The weight grid is shared by every PROGRAM_BACKENDS substrate, so
+    validity only depends on the grid fields (B_A, coding, per_channel)
+    and the shape — a scoped ``override(backend=...)`` keeps the image;
+    an ``override(ba=...)`` correctly drops to the on-the-fly path.
+    """
+    return (
+        img is not None
+        and spec.backend in PROGRAM_BACKENDS
+        and img.ba == spec.ba
+        and Coding(img.coding) == Coding(spec.coding)
+        and img.per_channel == spec.per_channel
+        and img.ws.ndim == 3
+        and img.ws.shape == (w.shape[0], spec.ba, w.shape[1])
+    )
+
+
+# ------------------------------------------------------ param-tree walk
+
+# attention param names -> policy path suffixes (see repro.models.attention)
+_ATTN = {"wq": "q", "wk": "k", "wv": "v", "wo": "o",
+         "w_dkv": "dkv", "w_krope": "krope", "w_ukv": "ukv"}
+# raw stacked expert arrays in the moe dict -> policy paths
+_MOE_EXPERT = {"w_gate": "moe.gate", "w_up": "moe.up", "w_down": "moe.down"}
+
+
+def _classify(names: tuple) -> Optional[tuple]:
+    """(policy_path, kind) of the linear dict at key chain ``names``, or
+    None for unmanaged / by-design-digital projections (routers, RG-LRU
+    gates — those dispatch with ``spec=None`` and never quantize)."""
+    leaf = names[-1]
+    if leaf == "lm_head":
+        return "unembed", "unembed"
+    if "attn" in names:
+        if leaf in _ATTN:
+            prefix = "cross" if "cross" in names else "attn"
+            return f"{prefix}.{_ATTN[leaf]}", "attn"
+        return None
+    if "rec" in names:
+        return (f"rec.{leaf}", "rec") if leaf in ("in_x", "in_gate", "out") \
+            else None
+    if "ssm" in names:
+        return (f"ssm.{leaf}", "ssm") if leaf in ("in_proj", "out_proj") \
+            else None
+    if "moe" in names:
+        if "shared" in names and leaf in ("gate", "up", "down"):
+            return f"moe.shared.{leaf}", "moe"
+        return None                       # router: digital by design
+    if "mlp" in names and leaf in ("gate", "up", "down"):
+        return f"mlp.{leaf}", "mlp"
+    return None
+
+
+def _walk(params: Any, cfg) -> Iterator[tuple]:
+    """Yield ``(container_path, install_key, tag, kind, w)`` per managed
+    projection, in model order.  ``container_path`` addresses the dict the
+    image is installed into (under ``install_key``)."""
+
+    def visit(node, path):
+        if isinstance(node, dict):
+            if "w" in node and hasattr(node["w"], "ndim") \
+                    and node["w"].ndim >= 2:
+                names = tuple(k for k in path if isinstance(k, str))
+                hit = _classify(names) if names else None
+                if hit is not None:
+                    yield path, "cima", hit[0], hit[1], node["w"]
+                return                      # a linear dict is a leaf module
+            for k, v in node.items():
+                if k in _MOE_EXPERT and "moe" in path \
+                        and hasattr(v, "ndim") and v.ndim >= 2:
+                    yield (path, ("cima", _MOE_EXPERT[k].split(".")[1]),
+                           _MOE_EXPERT[k], "moe", v)
+                else:
+                    yield from visit(v, path + (k,))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                yield from visit(v, path + (i,))
+
+    yield from visit(params, ())
+    # tied unembed: the managed MVM is x @ table.T — compile the transpose
+    if cfg.tie_embeddings and isinstance(params, dict) \
+            and "embed" in params and "table" in params["embed"]:
+        yield (("embed",), "cima", "unembed", "unembed",
+               params["embed"]["table"].T)
+
+
+def _path_str(path: tuple, key) -> str:
+    parts = [str(p) for p in path]
+    parts += list(key) if isinstance(key, tuple) else [key]
+    return ".".join(parts)
+
+
+# -------------------------------------------------------------- programs
+
+@dataclasses.dataclass
+class CimaProgram:
+    """A compiled weight-stationary program: images + their allocation.
+
+    ``images`` is keyed by the (unique) param-tree install path; the
+    ``tag`` on each image is the policy path it resolved.  ``version``
+    tracks the weight snapshot the images were built from (see
+    :class:`ProgramManager`).
+    """
+
+    images: dict
+    capacity_tiles: Optional[int] = None    # None = unbounded array
+    version: int = 0
+
+    def __bool__(self) -> bool:
+        return bool(self.images)
+
+    @property
+    def tiles_used(self) -> int:
+        return sum(i.tiles * i.copies for i in self.images.values()
+                   if i.resident)
+
+    @property
+    def tiles_total(self) -> int:
+        return sum(i.tiles * i.copies for i in self.images.values())
+
+    def reload_segments_per_pass(self) -> int:
+        """Row segments rewritten per forward pass (streamed images)."""
+        return sum(i.segments * i.copies for i in self.images.values()
+                   if not i.resident)
+
+    def reload_cycles_per_pass(self) -> int:
+        return self.reload_segments_per_pass() * segment_cycles()
+
+    def initial_load_cycles(self) -> int:
+        """One-time cycles to write the standing (resident) allocation."""
+        return sum(i.segments * i.copies for i in self.images.values()
+                   if i.resident) * segment_cycles()
+
+    def summary(self) -> dict:
+        from repro.core import energy as E
+
+        return {
+            "images": len(self.images),
+            "copies": sum(i.copies for i in self.images.values()),
+            "capacity_tiles": self.capacity_tiles,
+            "capacity_bits": (None if self.capacity_tiles is None else
+                              self.capacity_tiles * E.CIMA_ROWS * E.CIMA_COLS),
+            "tiles_total": self.tiles_total,
+            "tiles_resident": self.tiles_used,
+            "streamed": sorted(i.tag or i.path
+                               for i in self.images.values()
+                               if not i.resident),
+            "initial_load_cycles": self.initial_load_cycles(),
+            "reload_cycles_per_pass": self.reload_cycles_per_pass(),
+        }
+
+
+def build_program(params, cfg, capacity_chips: Optional[int] = None,
+                  version: int = 0) -> CimaProgram:
+    """Compile every policy-managed projection of ``params`` into a
+    :class:`CimaImage` and place the images on the virtual array.
+
+    ``capacity_chips`` bounds the standing allocation to that many
+    2304x256 (590kb) CIMA macros; ``None`` means every image is resident
+    (single-load).  Placement is first-fit in model order — the paper's
+    own strategy of keeping the hottest, earliest-touched matrices
+    stationary and streaming the tail.
+    """
+    images: dict = {}
+    used = 0
+    for path, key, tag, kind, w in _walk(params, cfg):
+        spec = cfg.policy.resolve(tag, kind=kind)
+        if spec.backend not in PROGRAM_BACKENDS:
+            continue
+        img = _compile_image(w, spec, _path_str(path, key))
+        need = img.tiles * img.copies
+        if capacity_chips is not None and used + need > capacity_chips:
+            img = dataclasses.replace(img, resident=False)
+        else:
+            used += need
+        images[img.path] = img
+    return CimaProgram(images=images, capacity_tiles=capacity_chips,
+                       version=version)
+
+
+def _set_in(tree, path: tuple, key, value):
+    """Immutable insert of ``value`` at ``tree[path...][key]`` (nested key
+    tuples create intermediate dicts)."""
+    if not path:
+        if isinstance(key, tuple):
+            if len(key) == 1:
+                key = key[0]
+            else:
+                sub = dict(tree.get(key[0], {})) if isinstance(tree, dict) \
+                    else {}
+                sub = _set_in(sub, (), key[1:], value)
+                tree = dict(tree)
+                tree[key[0]] = sub
+                return tree
+        out = dict(tree)
+        out[key] = value
+        return out
+    head, rest = path[0], path[1:]
+    if isinstance(tree, dict):
+        out = dict(tree)
+        out[head] = _set_in(tree[head], rest, key, value)
+        return out
+    out = list(tree)
+    out[head] = _set_in(tree[head], rest, key, value)
+    return type(tree)(out)           # preserve list vs tuple containers
+
+
+def install_program(params, program: CimaProgram, cfg):
+    """A copy of ``params`` with each image inserted next to its weight
+    (key ``"cima"``), where :func:`repro.models.layers.linear`,
+    ``unembed`` and the MoE expert vmap pick it up.  Don't train on
+    installed params: gradients are the usual STE gradients, but the
+    images would go stale on the first optimizer step — strip and
+    rebuild via :class:`ProgramManager` instead (DESIGN.md §8)."""
+    if not program:
+        return params
+    out = params
+    for path, key, _tag, _kind, _w in _walk(params, cfg):
+        pstr = _path_str(path, key)
+        if pstr in program.images:
+            out = _set_in(out, path, key, program.images[pstr])
+    return out
+
+
+def strip_program(params):
+    """Remove every installed image (the inverse of install_program).
+
+    Drops image leaves AND image-only container dicts (the MoE expert
+    install writes ``moe["cima"] = {"gate": img, ...}`` — leaving an
+    empty dict behind would change the treedef and trip
+    ``params.get("cima")`` consumers).
+    """
+    def is_image_container(v):
+        return isinstance(v, dict) and v and \
+            all(isinstance(x, CimaImage) for x in v.values())
+
+    def strip(node):
+        if isinstance(node, dict):
+            return {k: strip(v) for k, v in node.items()
+                    if not isinstance(v, CimaImage)
+                    and not is_image_container(v)}
+        if isinstance(node, (list, tuple)):
+            return type(node)(strip(v) for v in node)
+        return node
+
+    return strip(params)
+
+
+# ---------------------------------------------------------- invalidation
+
+class ProgramManager:
+    """Freshness contract between training and serving/eval.
+
+    The trainer calls :meth:`invalidate` after every optimizer update
+    (weights moved; compiled images are stale); consumers call
+    :meth:`ensure` with the current params and get a cached program
+    unless it was invalidated — rebuild is lazy, once per weight
+    snapshot, not per forward.
+    """
+
+    def __init__(self, cfg, capacity_chips: Optional[int] = None):
+        self.cfg = cfg
+        self.capacity_chips = capacity_chips
+        self._program: Optional[CimaProgram] = None
+        self._dirty = True
+        self.version = 0
+
+    def invalidate(self) -> None:
+        """Weights changed (an optimizer step applied): images are stale."""
+        self._dirty = True
+
+    def ensure(self, params) -> CimaProgram:
+        """The current program for ``params`` (rebuilt only if stale)."""
+        if self._dirty or self._program is None:
+            self.version += 1
+            self._program = build_program(
+                params, self.cfg, capacity_chips=self.capacity_chips,
+                version=self.version)
+            self._dirty = False
+        return self._program

@@ -78,6 +78,114 @@ def input_planes(x_q: jax.Array, cfg: BpbsConfig) -> tuple[jax.Array, jax.Array]
     return planes, mask
 
 
+def adc_full_scale(nu: jax.Array, bank_rows, cfg: BpbsConfig):
+    """The ADC full scale of one bank conversion (shared by the fast path,
+    the physics reference, and the Pallas kernel epilogue — parity between
+    them is structural, not copy-pasted).
+
+    With ``adaptive_range`` the Sparsity Controller sets the range to the
+    unmasked-row count ``nu`` (it knows the mask before the evaluation
+    fires); otherwise the range is the bank's static row count.  Clamping
+    to >= 1 happens inside :func:`repro.core.adc.adc_quantize_sum`.
+    """
+    return nu if cfg.adaptive_range else bank_rows
+
+
+def gemm_adc_epilogue(
+    d: jax.Array,
+    nu: jax.Array,
+    bank_rows,
+    cfg: BpbsConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """GEMM-identity epilogue of one plane-pair evaluation.
+
+    ``d`` is the raw plane dot product; ``nu`` (broadcastable to ``d``) is
+    the bank's unmasked-row count.  Recovers the column popcount
+    (``p = (d + nu) / 2`` under XNOR, ``p = d`` under AND), applies the
+    ADC transfer over :func:`adc_full_scale`, and maps back to the signed
+    dot.  This is the single definition the fast path AND the Pallas
+    kernel evaluate — the duplicated full-scale/``nu`` handling the
+    backends used to carry inline.
+    """
+    from .cima import signed_dot_from_popcount
+
+    if cfg.coding == Coding.XNOR:
+        p = (d + nu) * 0.5
+    else:
+        p = d
+    if cfg.ideal_adc:
+        p_hat = p
+    else:
+        fs = adc_full_scale(nu, bank_rows, cfg)
+        p_hat = adc_quantize_sum(p, fs, cfg.adc_bits, cfg.adc_sigma_lsb, key)
+    return signed_dot_from_popcount(p_hat, nu, cfg.coding)
+
+
+def bpbs_matmul_planes(
+    x_q: jax.Array,               # [..., N] integers on the coding grid
+    ws: jax.Array,                # [N, BA, M] weight bit planes (kernel layout)
+    cfg: BpbsConfig,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """BP/BS MVM consuming pre-decomposed weight bit planes.
+
+    This is the plane-level execution path: weights are stationary in the
+    CIMA, so a compiled :class:`~repro.accel.program.CimaImage` supplies
+    ``ws`` directly — in the kernel's ``[N, B_A, M]`` layout, any exact
+    small-int dtype (int8 images stream at 1 byte/plane-element) — and no
+    per-call ``quantize``/``weight_planes`` runs.  :func:`bpbs_matmul_int`
+    is the on-the-fly wrapper that decomposes ``w_q`` first; both produce
+    bit-identical results by construction.
+    """
+    xs, mask = input_planes(x_q, cfg)           # [..., N, BX], [..., N]
+    n = x_q.shape[-1]
+    wxv = jnp.asarray(cfg.wx, dtype=jnp.float32)
+    wav = jnp.asarray(cfg.wa, dtype=jnp.float32)
+
+    from repro.distributed.autoshard import cs
+
+    m = ws.shape[2]
+    y = jnp.zeros(x_q.shape[:-1] + (m,), dtype=jnp.float32)
+    n_banks = -(-n // cfg.bank_n)
+    for b in range(n_banks):
+        s, e = b * cfg.bank_n, min((b + 1) * cfg.bank_n, n)
+        # planes are exactly representable in bf16 (+-1/0/1 and {0,1});
+        # halving the streamed bytes of the dominant GEMM is free accuracy-wise
+        xb = xs[..., s:e, :].astype(jnp.bfloat16)
+        wb = ws[s:e].astype(jnp.bfloat16)
+        mb = mask[..., s:e]
+        nu = jnp.sum(mb, axis=-1)                # [...] unmasked rows in bank
+        # one GEMM per bank covering all (kx, ka) plane pairs.  Formulated
+        # as a plain 2-D matmul [T*BX, N] @ [N, BA*M] — the chip's own
+        # column-parallel layout — so it inherits the digital path's
+        # sharding behaviour (N: FSDP, BA*M: TP).  The 4-D einsum form left
+        # XLA all-reducing the full [tokens, BX, M, BA] tensor over the
+        # data axis (§Perf cell c, iteration 1).
+        lead = xb.shape[:-2]
+        t = 1
+        for dim in lead:
+            t *= dim
+        nb = e - s
+        x2 = jnp.swapaxes(xb, -1, -2).reshape(t * cfg.bx, nb)
+        w2 = wb.reshape(nb, cfg.ba * m)
+        # gather the (tiny, bf16) weight planes over the FSDP axis up front:
+        # left to itself the partitioner all-reduces the full f32
+        # [T*BX, BA*M] partial products over "data" — 4.3 GB vs the 33 MB
+        # plane gather (§Perf cell c, iterations 1-2)
+        w2 = cs(w2, (None, ["tp"]))
+        d2 = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
+        d = d2.reshape(*lead, cfg.bx, cfg.ba, m)
+        subkey = None
+        if key is not None:
+            key, subkey = jax.random.split(key)
+        d_hat = gemm_adc_epilogue(d, nu[..., None, None, None],
+                                  float(e - s), cfg, subkey)
+        # near-memory datapath: barrel shift (plane weights) + accumulate
+        y = y + jnp.einsum("...xam,x,a->...m", d_hat, wxv, wav)
+    return y
+
+
 def bpbs_matmul_int(
     x_q: jax.Array,               # [..., N] integers on the coding grid
     w_q: jax.Array,               # [N, M]   integers on the coding grid
@@ -86,81 +194,26 @@ def bpbs_matmul_int(
 ) -> jax.Array:
     """BP/BS MVM on the integer grids: returns [..., M] (float32, integer-valued
     when ``adc_sigma_lsb == 0``).  Matches ``x_q @ w_q`` exactly whenever the
-    per-bank column dynamic range fits the ADC (paper §3)."""
-    xs, mask = input_planes(x_q, cfg)           # [..., N, BX], [..., N]
-    wp = weight_planes(w_q, cfg)                 # [N, M, BA]
-    n = x_q.shape[-1]
-    wxv = jnp.asarray(cfg.wx, dtype=jnp.float32)
-    wav = jnp.asarray(cfg.wa, dtype=jnp.float32)
+    per-bank column dynamic range fits the ADC (paper §3).
 
-    from repro.distributed.autoshard import cs
-
-    y = jnp.zeros(x_q.shape[:-1] + (w_q.shape[-1],), dtype=jnp.float32)
-    n_banks = -(-n // cfg.bank_n)
-    for b in range(n_banks):
-        s, e = b * cfg.bank_n, min((b + 1) * cfg.bank_n, n)
-        # planes are exactly representable in bf16 (+-1/0/1 and {0,1});
-        # halving the streamed bytes of the dominant GEMM is free accuracy-wise
-        xb = xs[..., s:e, :].astype(jnp.bfloat16)
-        wb = wp[s:e].astype(jnp.bfloat16)
-        mb = mask[..., s:e]
-        nu = jnp.sum(mb, axis=-1)                # [...] unmasked rows in bank
-        # one GEMM per bank covering all (kx, ka) plane pairs.  Formulated
-        # as a plain 2-D matmul [T*BX, N] @ [N, M*BA] — the chip's own
-        # column-parallel layout — so it inherits the digital path's
-        # sharding behaviour (N: FSDP, M*BA: TP).  The 4-D einsum form left
-        # XLA all-reducing the full [tokens, BX, M, BA] tensor over the
-        # data axis (§Perf cell c, iteration 1).
-        lead = xb.shape[:-2]
-        t = 1
-        for dim in lead:
-            t *= dim
-        nb, m = e - s, w_q.shape[-1]
-        x2 = jnp.swapaxes(xb, -1, -2).reshape(t * cfg.bx, nb)
-        w2 = wb.reshape(nb, m * cfg.ba)
-        # gather the (tiny, bf16) weight planes over the FSDP axis up front:
-        # left to itself the partitioner all-reduces the full f32
-        # [T*BX, M*BA] partial products over "data" — 4.3 GB vs the 33 MB
-        # plane gather (§Perf cell c, iterations 1-2)
-        w2 = cs(w2, (None, ["tp"]))
-        d2 = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
-        d = d2.reshape(*lead, cfg.bx, m, cfg.ba)
-        if cfg.coding == Coding.XNOR:
-            p = (d + nu[..., None, None, None]) / 2.0
-        else:
-            p = d
-        if cfg.ideal_adc:
-            p_hat = p
-        else:
-            fs = nu if cfg.adaptive_range else float(e - s)
-            fs = fs[..., None, None, None] if cfg.adaptive_range else fs
-            subkey = None
-            if key is not None:
-                key, subkey = jax.random.split(key)
-            p_hat = adc_quantize_sum(
-                p, fs, cfg.adc_bits, cfg.adc_sigma_lsb, subkey
-            )
-        if cfg.coding == Coding.XNOR:
-            d_hat = 2.0 * p_hat - nu[..., None, None, None]
-        else:
-            d_hat = p_hat
-        # near-memory datapath: barrel shift (plane weights) + accumulate
-        y = y + jnp.einsum("...xma,x,a->...m", d_hat, wxv, wav)
-    return y
+    On-the-fly wrapper: decomposes ``w_q`` per call, then runs the
+    plane-level path (:func:`bpbs_matmul_planes`)."""
+    ws = jnp.transpose(weight_planes(w_q, cfg), (0, 2, 1))
+    return bpbs_matmul_planes(x_q, ws, cfg, key)
 
 
-def bpbs_matmul_int_reference(
-    x_q: jax.Array, w_q: jax.Array, cfg: BpbsConfig
+def bpbs_matmul_planes_reference(
+    x_q: jax.Array, ws: jax.Array, cfg: BpbsConfig
 ) -> jax.Array:
-    """Physics-path reference via the cell-level CIMA model (slow; tests only)."""
+    """Physics-path reference via the cell-level CIMA model, consuming
+    pre-decomposed weight planes ``ws`` [N, BA, M] (slow; tests only)."""
     from . import cima
 
-    xs, mask = input_planes(x_q, cfg)
+    _, mask = input_planes(x_q, cfg)
     # NOTE: for the cell model, XNOR planes must stay +-1 and masking is a
     # separate signal; recompute unmasked planes here.
     planes = int_to_planes(x_q, cfg.bx, cfg.coding)
-    wp = weight_planes(w_q, cfg)                 # [N, M, BA]
-    n, m = w_q.shape
+    n, m = ws.shape[0], ws.shape[2]
     wxv = jnp.asarray(cfg.wx, dtype=jnp.float32)
     wav = jnp.asarray(cfg.wa, dtype=jnp.float32)
     y = jnp.zeros(x_q.shape[:-1] + (m,), dtype=jnp.float32)
@@ -170,11 +223,20 @@ def bpbs_matmul_int_reference(
         for ka in range(cfg.ba):
             for kx in range(cfg.bx):
                 p = cima.column_popcount(
-                    wp[s:e, :, ka], planes[..., s:e, kx], mask[..., s:e], cfg.coding
+                    ws[s:e, ka, :].astype(jnp.float32),
+                    planes[..., s:e, kx], mask[..., s:e], cfg.coding
                 )
                 if not cfg.ideal_adc:
-                    fs = nu[..., None] if cfg.adaptive_range else float(e - s)
+                    fs = adc_full_scale(nu[..., None], float(e - s), cfg)
                     p = adc_quantize_sum(p, fs, cfg.adc_bits)
                 d = cima.signed_dot_from_popcount(p, nu[..., None], cfg.coding)
                 y = y + wxv[kx] * wav[ka] * d
     return y
+
+
+def bpbs_matmul_int_reference(
+    x_q: jax.Array, w_q: jax.Array, cfg: BpbsConfig
+) -> jax.Array:
+    """On-the-fly physics reference: decompose ``w_q``, then the cell model."""
+    ws = jnp.transpose(weight_planes(w_q, cfg), (0, 2, 1))
+    return bpbs_matmul_planes_reference(x_q, ws, cfg)

@@ -27,16 +27,14 @@ accumulation of <=2304 unit products is exact).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.core.bpbs import BpbsConfig
+from repro.core.bpbs import BpbsConfig, gemm_adc_epilogue
 from repro.kernels import _compat
-from repro.core.quant import Coding
 
 
 def _kernel(
@@ -57,11 +55,7 @@ def _kernel(
         out_ref[...] = jnp.zeros_like(out_ref)
 
     nu = nu_ref[...]                                  # [bb, 1]
-    if cfg.adaptive_range:
-        fs = jnp.maximum(nu, 1.0)                     # sparsity-controlled range
-    else:
-        fs = jnp.maximum(fs_ref[0, 0], 1.0)
-    cmax = float(2 ** cfg.adc_bits - 1)
+    fs_static = fs_ref[0, 0]
 
     acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
     for kx in range(cfg.bx):
@@ -73,19 +67,10 @@ def _kernel(
                 x, w, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )
-            if cfg.coding == Coding.XNOR:
-                p = (d + nu) * 0.5                    # popcount from GEMM identity
-            else:
-                p = d
-            if not cfg.ideal_adc:
-                # 8-b SAR ADC: clip + round to codes, reconstruct
-                code = jnp.clip(jnp.round(jnp.clip(p, 0.0, fs) * (cmax / fs)),
-                                0.0, cmax)
-                p = jnp.round(code * (fs / cmax))
-            if cfg.coding == Coding.XNOR:
-                d_hat = 2.0 * p - nu
-            else:
-                d_hat = p
+            # popcount recovery + SAR ADC transfer + signed-dot recovery:
+            # the same epilogue definition the fast path evaluates (no
+            # noise draw in-kernel: key=None skips it, as before)
+            d_hat = gemm_adc_epilogue(d, nu, fs_static, cfg)
             # near-memory datapath: barrel shift + accumulate (time & space)
             acc = acc + (wx[kx] * wa[ka]) * d_hat
     out_ref[...] += acc
@@ -169,20 +154,27 @@ def prepare_inputs(x_q: jax.Array, cfg: BpbsConfig):
     return xs, nu, lead
 
 
-def prepare_weights(w_q: jax.Array, cfg: BpbsConfig):
-    """Weight bit planes [N, BA, M] (precomputable: weights are stationary
-    in the CIMA — reloading costs ~18k cycles on-chip, paper Fig. 8)."""
-    from repro.core.bpbs import weight_planes
-
-    wp = weight_planes(w_q, cfg)                   # [N, M, BA]
-    ws = jnp.transpose(wp, (0, 2, 1)).astype(jnp.int8)
-    n = w_q.shape[0]
+def bank_full_scales(n: int, cfg: BpbsConfig) -> jax.Array:
+    """Static ADC full scale per bank: the bank's (possibly ragged last)
+    row count.  Derivable from N alone, so a stored weight image never
+    needs to carry it."""
     n_banks = -(-n // cfg.bank_n)
     sizes = np.minimum(
         np.full(n_banks, cfg.bank_n), n - np.arange(n_banks) * cfg.bank_n
     )
-    fs = jnp.asarray(sizes, dtype=jnp.float32)
-    return ws, fs
+    return jnp.asarray(sizes, dtype=jnp.float32)
+
+
+def prepare_weights(w_q: jax.Array, cfg: BpbsConfig):
+    """Weight bit planes [N, BA, M] (precomputable: weights are stationary
+    in the CIMA — reloading costs ~18k cycles on-chip, paper Fig. 8).
+    This is exactly the layout a :class:`~repro.accel.program.CimaImage`
+    stores once at program-load time."""
+    from repro.core.bpbs import weight_planes
+
+    wp = weight_planes(w_q, cfg)                   # [N, M, BA]
+    ws = jnp.transpose(wp, (0, 2, 1)).astype(jnp.int8)
+    return ws, bank_full_scales(w_q.shape[0], cfg)
 
 
 def cima_mvm(
@@ -198,3 +190,20 @@ def cima_mvm(
     ws, fs = prepare_weights(w_q, cfg)
     y = cima_mvm_planes(xs, ws, nu, fs, cfg, block_b, block_m, interpret)
     return y.reshape(*lead, w_q.shape[1])
+
+
+def cima_mvm_from_planes(
+    x_q: jax.Array,
+    ws: jax.Array,                # [N, BA, M] int8 weight bit planes
+    cfg: BpbsConfig,
+    block_b: int = 128,
+    block_m: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """BP/BS MVM consuming a pre-compiled weight image: the weight-
+    stationary serving path.  Only the (dynamic) inputs are decomposed
+    per call; the planes come straight from the loaded program."""
+    xs, nu, lead = prepare_inputs(x_q, cfg)
+    fs = bank_full_scales(ws.shape[0], cfg)
+    y = cima_mvm_planes(xs, ws, nu, fs, cfg, block_b, block_m, interpret)
+    return y.reshape(*lead, ws.shape[2])

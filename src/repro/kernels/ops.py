@@ -34,6 +34,22 @@ def cima_mvm(
     return _cima.cima_mvm(x_q, w_q, cfg, block_b, block_m, interpret)
 
 
+def cima_mvm_from_planes(
+    x_q: jax.Array,
+    ws: jax.Array,
+    cfg: BpbsConfig,
+    block_b: int = 128,
+    block_m: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Weight-stationary kernel entry: ``ws`` [N, BA, M] int8 bit planes
+    from a compiled CIMA image; [..., N] inputs -> [..., M] (f32)."""
+    if interpret is None:
+        interpret = not on_tpu()
+    return _cima.cima_mvm_from_planes(x_q, ws, cfg, block_b, block_m,
+                                      interpret)
+
+
 def flash_attention(
     q: jax.Array,
     k: jax.Array,

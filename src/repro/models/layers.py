@@ -35,8 +35,13 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False,
 
 def linear(params: dict, x: jax.Array, spec: Optional[ExecSpec] = None,
            dtype=jnp.bfloat16) -> jax.Array:
-    """x @ w (+ b), through the configured execution backend."""
-    y = accel_matmul(x, params["w"], spec, dtype=dtype).astype(dtype)
+    """x @ w (+ b), through the configured execution backend.
+
+    If a compiled weight image was installed next to the weight (key
+    ``"cima"``, see :func:`repro.accel.install_program`), it rides into
+    dispatch — the weight-stationary serving path."""
+    y = accel_matmul(x, params["w"], spec, dtype=dtype,
+                     image=params.get("cima")).astype(dtype)
     if "b" in params:
         y = y + params["b"].astype(y.dtype)
     return y
@@ -86,9 +91,12 @@ def embed(params: dict, tokens: jax.Array, dtype=jnp.bfloat16,
 
 def unembed(params: dict, x: jax.Array, spec: Optional[ExecSpec] = None,
             dtype=jnp.bfloat16) -> jax.Array:
-    """LM head (tied): x @ table.T — a static-weight MVM, CIM-eligible."""
+    """LM head (tied): x @ table.T — a static-weight MVM, CIM-eligible.
+    A program image (compiled from the transposed table) installs under
+    ``"cima"`` in the embed dict."""
     w = params["table"].T
-    return accel_matmul(x, w, spec, dtype=dtype).astype(jnp.float32)
+    return accel_matmul(x, w, spec, dtype=dtype,
+                        image=params.get("cima")).astype(jnp.float32)
 
 
 # ---------------------------------------------------------------- rotary

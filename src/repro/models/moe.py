@@ -91,18 +91,29 @@ def moe_ffn(params, x, cfg, dtype=jnp.bfloat16):
     sp = cfg.policy.resolver("moe")
     sp_g, sp_u, sp_d = sp("moe.gate"), sp("moe.up"), sp("moe.down")
 
-    def expert(xe_e, wg, wu, wd):
-        ge = accel_matmul(xe_e, wg, sp_g, dtype=dtype)
-        ue = accel_matmul(xe_e, wu, sp_u, dtype=dtype)
-        return accel_matmul(act(ge) * ue, wd, sp_d, dtype=dtype).astype(dtype)
+    def expert(xe_e, wg, wu, wd, ig=None, iu=None, idn=None):
+        ge = accel_matmul(xe_e, wg, sp_g, dtype=dtype, image=ig)
+        ue = accel_matmul(xe_e, wu, sp_u, dtype=dtype, image=iu)
+        return accel_matmul(act(ge) * ue, wd, sp_d, dtype=dtype,
+                            image=idn).astype(dtype)
 
     # the vmapped expert axis is invisible to the dispatcher's shape-based
     # call counting; scale the energy-trace records by e
     from repro.accel import vmapped
 
+    # compiled per-expert weight images (repro.accel.program) vmap right
+    # alongside the stacked expert weights — each expert keeps its own
+    # planes and quantization scales.  A mixed policy may compile only
+    # some of gate/up/down; missing entries fall back to on-the-fly.
+    imgs = params.get("cima") or None
     with vmapped(e):
-        ye = jax.vmap(expert)(xe, params["w_gate"], params["w_up"],
-                              params["w_down"])
+        if imgs is None:
+            ye = jax.vmap(expert)(xe, params["w_gate"], params["w_up"],
+                                  params["w_down"])
+        else:
+            ye = jax.vmap(expert)(xe, params["w_gate"], params["w_up"],
+                                  params["w_down"], imgs.get("gate"),
+                                  imgs.get("up"), imgs.get("down"))
 
     ye = cs(ye, ("tp", None, None))
     # ---- combine: gather each kept assignment back to its token

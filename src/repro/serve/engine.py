@@ -34,13 +34,32 @@ class ServeConfig:
     temperature: float = 0.0          # 0 = greedy
     eos_id: int = -1                  # -1 = never stop early
     seed: int = 0
+    # weight-stationary CIMA program (repro.accel.program): compile every
+    # quantized projection's bit planes ONCE at engine init so decode
+    # steps never re-quantize weights.  cima_chips bounds the standing
+    # allocation (N x 590kb arrays); None = everything resident.
+    use_program: bool = True
+    cima_chips: Optional[int] = None
 
 
 class Engine:
     def __init__(self, params, cfg, serve_cfg: ServeConfig):
-        self.params = params
         self.cfg = cfg
         self.scfg = serve_cfg
+        # program load: the paper's weight-stationary step.  For an
+        # all-digital policy the program is empty and params pass through
+        # untouched; otherwise every managed projection's image installs
+        # into the param tree and prefill/decode/splice all reuse it.
+        from repro.accel import build_program, install_program
+
+        self.program = None
+        if serve_cfg.use_program:
+            program = build_program(params, cfg,
+                                    capacity_chips=serve_cfg.cima_chips)
+            if program:
+                self.program = program
+                params = install_program(params, program, cfg)
+        self.params = params
         self._prefill = jax.jit(
             lambda p, t, fe: prefill(p, t, cfg, serve_cfg.max_seq, fe))
         # pad-masked variant for ragged admission (one compile per bucket
@@ -130,7 +149,9 @@ class ContinuousBatcher:
 
     def __init__(self, params, cfg, serve_cfg: ServeConfig, n_slots: int):
         self.engine = Engine(params, cfg, serve_cfg)
-        self.params, self.cfg, self.scfg = params, cfg, serve_cfg
+        # the engine's params carry the installed program images: admission
+        # re-prefills and splices must reuse them, not the raw weights
+        self.params, self.cfg, self.scfg = self.engine.params, cfg, serve_cfg
         self.n_slots = n_slots
         self.pending: collections.deque[_Request] = collections.deque()
         self.results: dict[int, list[int]] = {}

@@ -50,8 +50,16 @@ def train(cfg, data_cfg: DataConfig, opt_cfg: AdamWConfig,
           comp_cfg: Optional[CompressionConfig] = None,
           init_params_fn: Optional[Callable] = None,
           state_shardings=None, log_fn: Optional[Callable] = None,
-          max_seq: int = 32768):
-    """Run (or resume) training.  Returns (final_state, history)."""
+          max_seq: int = 32768, program_manager=None):
+    """Run (or resume) training.  Returns (final_state, history).
+
+    ``program_manager`` (a :class:`repro.accel.ProgramManager`) is
+    invalidated after every optimizer update: compiled CIMA weight images
+    are snapshots of the weights, so any serving/eval consumer sharing
+    the manager lazily rebuilds them from the fresh params.  Training
+    itself always runs the on-the-fly STE path — images are never
+    installed into the differentiated params.
+    """
     from repro.models import init_params
 
     log = log_fn or (lambda s: print(s, flush=True))
@@ -85,6 +93,8 @@ def train(cfg, data_cfg: DataConfig, opt_cfg: AdamWConfig,
                 break
             t0 = time.monotonic()
             state, metrics = step_fn(state, batch)
+            if program_manager is not None:
+                program_manager.invalidate()   # weights moved: images stale
             metrics = jax.device_get(metrics)
             dt = time.monotonic() - t0
             durations.append(dt)

@@ -1,0 +1,338 @@
+"""Weight-stationary CIMA programs (repro.accel.program).
+
+Covers the acceptance contract of the program/allocator refactor:
+
+* program-cached execution is BIT-FOR-BIT identical to the on-the-fly
+  path on every quantizing backend (matmul level and model level);
+* serving decode performs zero weight quantize/plane-decompose ops after
+  program load (every traced non-digital MVM is ``program=True``);
+* the capacity-aware bank allocator reproduces the paper's ~18k-cycle
+  full-array reload from the ``C_LOAD``/``C_A``/``A_ROW_SEGMENT``
+  constants, streams over-capacity images, and charges their reloads
+  through ``trace()``/``energy_summary()``;
+* images are invalidated and rebuilt after an optimizer step while QAT
+  training itself keeps the on-the-fly STE path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import accel
+from repro.accel import (ExecSpec, ProgramManager, build_program,
+                         install_program, strip_program)
+from repro.accel.program import (_compile_image, image_matches,
+                                 image_segments, image_tiles, segment_cycles)
+from repro.configs import get_config
+from repro.core import energy as E
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.serve.engine import Engine, ServeConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _operands(n=300, m=24, batch=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(batch, n)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    return x, w
+
+
+# ---------------------------------------------------------------- parity
+
+@pytest.mark.parametrize("backend", ["digital_int", "bpbs", "bpbs_ref",
+                                     "pallas"])
+def test_image_matmul_bit_for_bit(backend):
+    """Program path == on-the-fly path, exactly, on every quantizing
+    backend (same integer grids, same plane values, same epilogue)."""
+    x, w = _operands()
+    spec = ExecSpec(backend=backend, ba=4, bx=4)
+    img = _compile_image(w, spec, "unit")
+    y_fly = np.asarray(accel.matmul(x, w, spec))
+    y_img = np.asarray(accel.matmul(x, w, spec, image=img))
+    np.testing.assert_array_equal(y_img, y_fly)
+
+
+def test_image_survives_backend_override_but_not_grid_change():
+    """All PROGRAM_BACKENDS share one weight grid, so an image compiled
+    for bpbs serves a digital_int override bit-for-bit; changing B_A
+    invalidates it (the dispatcher falls back to on-the-fly)."""
+    x, w = _operands()
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4)
+    img = _compile_image(w, spec, "unit")
+
+    with accel.override(backend="digital_int"):
+        with accel.trace() as records:
+            y_img = accel.matmul(x, w, spec, image=img)
+    assert records[0].program and records[0].backend == "digital_int"
+    np.testing.assert_array_equal(
+        np.asarray(y_img),
+        np.asarray(accel.matmul(x, w, spec.with_(backend="digital_int"))))
+
+    with accel.override(ba=2):
+        with accel.trace() as records:
+            y_2b = accel.matmul(x, w, spec, image=img)
+    assert not records[0].program          # stale grid: image dropped
+    np.testing.assert_array_equal(
+        np.asarray(y_2b), np.asarray(accel.matmul(x, w, spec.with_(ba=2))))
+
+
+@pytest.mark.parametrize("backend", ["digital_int", "bpbs"])
+def test_model_program_parity_and_decode_has_zero_weight_quantize(backend):
+    """Model level: forward/decode through installed images match the
+    uncached params exactly, and every non-digital MVM in a decode step
+    is served from the program (the zero-weight-quantize assertion)."""
+    cfg = get_config("olmo-1b").reduced().with_accel(backend, ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=32)
+    program = build_program(params, cfg)
+    assert program and all(i.resident for i in program.images.values())
+    pp = install_program(params, program, cfg)
+
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    lg_fly, _ = forward(params, toks, cfg)
+    lg_img, _ = forward(pp, toks, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_img), np.asarray(lg_fly))
+
+    cache = init_cache(cfg, 2, 32)
+    tok = jnp.asarray([3, 5], jnp.int32)
+    with accel.trace() as records:
+        lg_d, _ = decode_step(pp, tok, cache, cfg)
+    quantizing = [r for r in records if r.backend != "digital"]
+    assert quantizing, "expected managed projections in the decode trace"
+    assert all(r.program for r in quantizing), \
+        "decode must serve every weight from the compiled program"
+    # and the uncached params really do quantize on the fly
+    with accel.trace() as records:
+        decode_step(params, tok, cache, cfg)
+    assert not any(r.program for r in records)
+
+
+@pytest.mark.slow
+def test_program_parity_pallas_and_moe_model():
+    """The kernel backend consumes stored [N, BA, M] planes directly, and
+    MoE expert images ride the expert vmap — both bit-for-bit."""
+    cfg = get_config("olmo-1b").reduced().with_accel("pallas", ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=16)
+    pp = install_program(params, build_program(params, cfg), cfg)
+    toks = jax.random.randint(KEY, (1, 4), 0, cfg.vocab)
+    lg_fly, _ = forward(params, toks, cfg)
+    lg_img, _ = forward(pp, toks, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_img), np.asarray(lg_fly))
+
+    cfg = get_config("deepseek-v2-lite-16b").reduced().with_accel(
+        "digital_int", ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=16)
+    program = build_program(params, cfg)
+    tags = {i.tag for i in program.images.values()}
+    assert {"moe.gate", "moe.up", "moe.down", "attn.dkv"} <= tags
+    pp = install_program(params, program, cfg)
+    lg_fly, _ = forward(params, toks, cfg)
+    lg_img, _ = forward(pp, toks, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_img), np.asarray(lg_fly))
+
+
+def test_engine_builds_and_serves_program():
+    """Engine compiles the program at init; generate() is identical with
+    and without it; digital policies build no program at all."""
+    cfg = get_config("olmo-1b").reduced().with_accel("bpbs", ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=64)
+    scfg = ServeConfig(max_seq=64, max_new_tokens=5)
+    eng = Engine(params, cfg, scfg)
+    assert eng.program is not None and eng.program.summary()["images"] > 0
+    eng_fly = Engine(params, cfg, dataclasses.replace(scfg,
+                                                      use_program=False))
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(1, cfg.vocab, (2, 8)), jnp.int32)
+    np.testing.assert_array_equal(eng.generate(prompts),
+                                  eng_fly.generate(prompts))
+
+    dig = Engine(init_params(get_config("olmo-1b").reduced(), KEY,
+                             max_seq=64),
+                 get_config("olmo-1b").reduced(), scfg)
+    assert dig.program is None
+
+
+# ------------------------------------------------------------- allocator
+
+def test_allocator_full_array_reload_is_18k_cycles():
+    """A [2304, 64] matrix at B_A=4 fills exactly one 2304x256 array; its
+    reload is 768 row segments at max(C_A, C_LOAD)=24 cycles — the
+    paper's ~18k-cycle figure, and exactly matrix_load_cycles()."""
+    assert image_tiles(2304, 64, 4) == 1
+    assert image_segments(2304, 64, 4) == 768
+    cycles = image_segments(2304, 64, 4) * segment_cycles()
+    assert cycles == E.matrix_load_cycles() == 18432
+    assert 17000 < cycles < 19000
+
+
+def test_allocator_capacity_streams_overflow_and_charges_loads():
+    """Images beyond capacity_chips are streamed (resident=False); their
+    dispatches carry loads in trace records and energy_summary charges
+    the reload cycles/energy through the C_A/C_LOAD constants."""
+    x, w = _operands(n=2304, m=64)
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4)
+    img = dataclasses.replace(_compile_image(w, spec, "full"),
+                              resident=False)
+    with accel.trace() as records:
+        accel.matmul(x, w, spec, image=img)
+    r = records[0]
+    assert r.program and r.loads == 1 and r.load_segments == 768
+    es = accel.energy_summary(records, vdd=0.85)
+    assert es["load_cycles"] == E.matrix_load_cycles()
+    assert es["load_pj"] > 0
+    # resident image: no load charge
+    with accel.trace() as records:
+        accel.matmul(x, w, spec, image=dataclasses.replace(img,
+                                                           resident=True))
+    assert records[0].loads == 0
+    assert accel.energy_summary(records)["load_cycles"] == 0
+
+
+def test_allocator_first_fit_residency_on_model():
+    """With a tight chip budget the leading images stay resident and the
+    tail streams; the program reports a per-pass reload schedule."""
+    cfg = get_config("olmo-1b").reduced().with_accel("bpbs", ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=32)
+    unbounded = build_program(params, cfg)
+    total = unbounded.tiles_total
+    assert unbounded.reload_cycles_per_pass() == 0
+
+    capped = build_program(params, cfg, capacity_chips=total // 2)
+    assert capped.tiles_used <= total // 2
+    streamed = [i for i in capped.images.values() if not i.resident]
+    assert streamed
+    assert capped.reload_cycles_per_pass() == sum(
+        i.segments * i.copies for i in streamed) * segment_cycles()
+    assert capped.summary()["streamed"]
+
+    # scanned-layer copies each count as a separate array load in traces
+    pp = install_program(params, capped, cfg)
+    toks = jax.random.randint(KEY, (1, 4), 0, cfg.vocab)
+    with accel.trace() as records:
+        forward(pp, toks, cfg)
+    traced_loads = sum(r.loads * r.load_segments for r in records)
+    assert traced_loads == capped.reload_segments_per_pass()
+
+
+def test_image_matches_guards_shape_and_grid():
+    x, w = _operands()
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4)
+    img = _compile_image(w, spec, "unit")
+    assert image_matches(img, spec, w)
+    assert not image_matches(img, spec.with_(ba=2), w)
+    assert not image_matches(img, spec.with_(per_channel=False), w)
+    assert not image_matches(img, spec.with_(backend="digital"), w)
+    assert not image_matches(img, spec, w[:200])
+    assert not image_matches(None, spec, w)
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "deepseek-v2-lite-16b"])
+def test_strip_program_roundtrip(arch):
+    """strip_program is the exact inverse of install_program — including
+    the MoE expert image container dict, which must not survive as an
+    empty ``moe["cima"]`` (that would crash moe_ffn's image branch)."""
+    cfg = get_config(arch).reduced().with_accel("bpbs", ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=32)
+    pp = install_program(params, build_program(params, cfg), cfg)
+    stripped = strip_program(pp)
+    assert jax.tree_util.tree_structure(stripped) == \
+        jax.tree_util.tree_structure(params)
+    leaves0 = jax.tree_util.tree_leaves(params)
+    leaves1 = jax.tree_util.tree_leaves(stripped)
+    assert all(np.array_equal(a, b) for a, b in zip(leaves0, leaves1))
+    # stripped params must run (an empty leftover container would crash)
+    toks = jax.random.randint(KEY, (1, 4), 0, cfg.vocab)
+    lg, _ = forward(stripped, toks, cfg)
+    assert bool(jnp.isfinite(lg).all())
+
+
+def test_partial_moe_policy_mixes_program_and_fly():
+    """A policy that keeps moe.down digital compiles only gate/up images;
+    the expert vmap must serve those two from the program and fall back
+    on-the-fly for down — same results as raw params."""
+    from repro.accel import PrecisionPolicy
+
+    pol = PrecisionPolicy(
+        rules=(("path:moe.down", ExecSpec(backend="digital")),),
+        default=ExecSpec(backend="digital_int", ba=4, bx=4))
+    cfg = get_config("deepseek-v2-lite-16b").reduced().with_policy(pol)
+    params = init_params(cfg, KEY, max_seq=16)
+    program = build_program(params, cfg)
+    tags = {i.tag for i in program.images.values()}
+    assert "moe.gate" in tags and "moe.up" in tags
+    assert "moe.down" not in tags
+    pp = install_program(params, program, cfg)
+    toks = jax.random.randint(KEY, (1, 4), 0, cfg.vocab)
+    lg_fly, _ = forward(params, toks, cfg)
+    lg_img, _ = forward(pp, toks, cfg)
+    np.testing.assert_array_equal(np.asarray(lg_img), np.asarray(lg_fly))
+
+
+# ----------------------------------------------------------- invalidation
+
+def test_program_manager_invalidation_after_optimizer_step():
+    """An optimizer update makes the images stale: the trainer's
+    invalidation hook forces a rebuild whose planes differ from the old
+    snapshot and match a fresh compile of the updated params."""
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.state import init_train_state
+    from repro.train.step import build_train_step
+
+    cfg = get_config("olmo-1b").reduced().with_accel("digital_int",
+                                                     ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=16)
+    mgr = ProgramManager(cfg)
+    prog0 = mgr.ensure(params)
+    assert mgr.ensure(params) is prog0        # cached while clean
+
+    state = init_train_state(params)
+    step_fn = build_train_step(cfg, AdamWConfig(lr=1e-2, warmup_steps=0))
+    batch = {"tokens": jax.random.randint(KEY, (2, 8), 0, cfg.vocab)}
+    state, _ = step_fn(state, batch)
+    mgr.invalidate()                           # the trainer hook
+
+    prog1 = mgr.ensure(state.params)
+    assert prog1 is not prog0 and prog1.version == prog0.version + 1
+    fresh = build_program(state.params, cfg)
+    key = next(iter(prog1.images))
+    np.testing.assert_array_equal(np.asarray(prog1.images[key].ws),
+                                  np.asarray(fresh.images[key].ws))
+    changed = any(
+        not np.array_equal(np.asarray(prog0.images[k].ws),
+                           np.asarray(prog1.images[k].ws))
+        for k in prog0.images)
+    assert changed, "optimizer step should move at least one image"
+
+
+def test_training_params_stay_uninstalled():
+    """QAT gradients flow through the on-the-fly STE path: the gradient
+    of a bpbs projection is the plain-GEMM STE gradient regardless of any
+    program existing elsewhere."""
+    x, w = _operands(n=64, m=8, batch=2)
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4, ideal_adc=True)
+
+    def loss(w):
+        return jnp.sum(accel.matmul(x, w, spec) ** 2)
+
+    g = jax.grad(loss)(w)
+    assert bool(jnp.isfinite(g).all()) and float(jnp.abs(g).max()) > 0
+
+
+def test_program_path_keeps_ste_gradients():
+    """Differentiating through an installed image yields the SAME STE
+    gradient as the on-the-fly path (the image's planes are constants of
+    the custom_vjp) — no silent zero-gradient stall if someone probes
+    gradients of Engine.params."""
+    x, w = _operands(n=64, m=8, batch=2)
+    spec = ExecSpec(backend="bpbs", ba=4, bx=4)
+    img = _compile_image(w, spec, "unit")
+
+    def loss(w, image):
+        return jnp.sum(accel.matmul(x, w, spec, image=image) ** 2)
+
+    g_img = jax.grad(loss)(w, img)
+    g_fly = jax.grad(lambda w: jnp.sum(accel.matmul(x, w, spec) ** 2))(w)
+    np.testing.assert_array_equal(np.asarray(g_img), np.asarray(g_fly))
+    assert float(jnp.abs(g_img).max()) > 0
