@@ -22,6 +22,11 @@ target.  This package is that interface at framework scale:
   spec the compute uses.
 * :mod:`repro.accel.dispatch` — :func:`matmul`, the single entry point
   every weight-bearing projection in :mod:`repro.models` goes through.
+* :mod:`repro.accel.shard`    — multi-chip mesh execution: partitioned
+  images (column-parallel along M, row-parallel along N with a psum
+  after the ADC epilogue) run under ``shard_map``, one per-device tile
+  per chip; dispatch engages it automatically when the ambient mesh
+  matches the image's compiled partition (DESIGN.md §9).
 * :mod:`repro.accel.program`  — weight-stationary CIMA programs:
   :func:`build_program` compiles every managed projection into a
   :class:`CimaImage` (int8 bit planes, the kernel's ``[N, B_A, M]``

@@ -93,14 +93,21 @@ class MvmRecord:
 
     tag: str          # the layer path the policy resolved (spec.tag)
     backend: str
-    n: int            # contraction dim (input vector length)
-    m: int            # output dim
+    n: int            # contraction dim (input vector length) — LOGICAL
+    m: int            # output dim — LOGICAL (full, never per-shard)
     ba: int
     bx: int
     calls: int        # number of row-vector MVMs (prod of leading dims)
     program: bool = False   # served from a compiled weight image?
     loads: int = 0          # image-copy reloads charged to this dispatch
-    load_segments: int = 0  # 768-b row segments per reload
+    load_segments: int = 0  # 768-b row segments per reload (per device)
+    # multi-chip mapping (repro.accel.shard): the record is emitted once
+    # per LOGICAL matmul before shard_map — a sharded trace has the same
+    # record count/calls/loads as the unsharded trace — and these two
+    # fields carry how the work was cut so energy_summary can derive
+    # per-device wall cycles (local tile) and system energy (x devices).
+    devices: int = 1        # mesh "model"-axis shards executing this MVM
+    partition: str = ""     # "col" | "row" | "" (unsharded)
 
 
 _TRACE_STACK: list[list] = []
@@ -193,6 +200,17 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     ``A_ROW_SEGMENT / DMA_WORD`` DMA words each (paper Fig. 8's ~18k-
     cycle full-array reload).  Returns totals plus a per-tag breakdown
     (energy in pJ, CIMU cycles, reload cycles).
+
+    Mesh-sharded records (``devices > 1``, DESIGN.md §9) aggregate
+    without double-counting under two explicit conventions:
+
+    * ``pj`` totals are SYSTEM energy: the local tile's energy summed
+      over all shards (devices run their tiles concurrently; every
+      joule is real).
+    * ``cycles`` totals are PER-DEVICE wall cycles: the local tile's
+      cycles (shards run in parallel, so per-device cycles are the
+      latency proxy), including the per-device reload cycles of
+      streamed images.
     """
     from repro.core import energy as E
     from .program import segment_cycles, segment_dma_words
@@ -216,13 +234,17 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
         row["mvms"] += r.calls
         if r.backend == "digital":
             continue
-        shape = E.MvmShape(n=r.n, m=r.m, ba=r.ba, bx=r.bx)
-        pj = E.mvm_energy_pj(shape, vdd, sparsity, readout)["total"] * r.calls
+        d_sh = max(getattr(r, "devices", 1), 1)
+        n_loc = r.n // d_sh if r.partition == "row" else r.n
+        m_loc = r.m // d_sh if r.partition == "col" else r.m
+        shape = E.MvmShape(n=n_loc, m=m_loc, ba=r.ba, bx=r.bx)
+        pj = E.mvm_energy_pj(shape, vdd, sparsity, readout)["total"] \
+            * r.calls * d_sh
         cyc = E.mvm_cycles(shape, readout) * r.calls
         if r.loads:
-            segs = r.loads * r.load_segments
-            lc = segs * seg_cycles
-            lp = segs * seg_words * e_dma
+            segs = r.loads * r.load_segments       # per-device segments
+            lc = segs * seg_cycles                 # per-device wall cycles
+            lp = segs * seg_words * e_dma * d_sh   # system energy
             row["load_cycles"] += lc
             load_cycles += lc
             load_pj += lp

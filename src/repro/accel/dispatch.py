@@ -40,6 +40,12 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
     if not tracing():
         return
     streamed = image is not None and not image.resident
+    # devices/partition come from the image's COMPILED layout: the trace
+    # is the chip cost model, and a program built for an N-chip mesh
+    # describes an N-chip system whether or not the host run actually
+    # shard_maps (numerics are identical either way) — this is what
+    # keeps BENCH_shard's analytic curve and a real mesh run in
+    # agreement record-for-record.
     record(MvmRecord(
         tag=spec.tag, backend=spec.backend,
         n=int(w.shape[0]), m=int(w.shape[1]),
@@ -48,7 +54,29 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
         program=image is not None,
         loads=1 if streamed else 0,
         load_segments=image.segments if streamed else 0,
+        devices=image.devices if image is not None else 1,
+        partition=(image.partition or "") if image is not None else "",
     ))
+
+
+def _shard_mesh(image):
+    """The ambient mesh, iff it matches the image's compiled partition.
+
+    Records stay logical either way: the record is emitted ONCE with the
+    full (n, m) before shard_map, so a sharded trace reports the same
+    total MVM count and loads as the unsharded trace of the same
+    workload — only the ``devices``/``partition`` annotations change.
+    """
+    if image is None or image.partition is None or image.devices <= 1:
+        return None
+    from repro.distributed.autoshard import get_mesh, in_manual
+
+    mesh = get_mesh()
+    if mesh is None or in_manual() or "model" not in mesh.axis_names:
+        return None
+    if int(dict(mesh.shape).get("model", 1)) != image.devices:
+        return None
+    return mesh
 
 
 def matmul(
@@ -87,9 +115,21 @@ def matmul(
 
     if image is not None and not image_matches(image, spec, w):
         image = None
+    mesh = _shard_mesh(image)
     _record_mvm(spec, x, w, image)
 
-    fn = get_backend(spec.backend)
+    if mesh is not None:
+        # mesh-partitioned program path: the backend runs under shard_map,
+        # one per-device tile of the image per chip (repro.accel.shard)
+        from .shard import sharded_program_matmul
+
+        img = image
+
+        def fn(x_, w_, spec_, ctx_):
+            return sharded_program_matmul(x_, spec_, img, mesh,
+                                          key=ctx_.key)
+    else:
+        fn = get_backend(spec.backend)
     if ctx is None:
         ctx = ExecContext(key=next_noise_key())
     if image is not None:

@@ -80,16 +80,24 @@ class CimaImage:
     n: int = 0                    # per-copy rows
     m: int = 0                    # per-copy output columns
     copies: int = 1               # stacked instances (layers x experts)
-    tiles: int = 0                # 2304x256 array tiles per copy
-    segments: int = 0             # 768-b row segments per copy (load cost)
+    tiles: int = 0                # 2304x256 array tiles per copy PER DEVICE
+    segments: int = 0             # 768-b row segments per copy PER DEVICE
     resident: bool = True         # placed in the standing allocation?
+    # multi-chip mapping (DESIGN.md §9): how the image splits over the
+    # mesh "model" axis.  "col" = bit planes split along M (each device
+    # owns m/devices output columns, no collective); "row" = split along
+    # N (each device owns n/devices contraction rows, partial sums
+    # all-reduced after the ADC epilogue); None = unsharded.
+    partition: Optional[str] = None
+    devices: int = 1              # model-axis shards the image is cut into
 
 
 jax.tree_util.register_dataclass(
     CimaImage,
     data_fields=["ws", "wq", "scale"],
     meta_fields=["path", "tag", "ba", "coding", "per_channel", "n", "m",
-                 "copies", "tiles", "segments", "resident"],
+                 "copies", "tiles", "segments", "resident", "partition",
+                 "devices"],
 )
 
 
@@ -128,12 +136,64 @@ def segment_dma_words() -> int:
     return E.A_ROW_SEGMENT // E.DMA_WORD
 
 
-def _compile_image(w: jax.Array, spec, path: str) -> CimaImage:
+# tag leaves whose projection is the second GEMM of a Megatron pair (the
+# input is already TP-sharded): split along N, partial-sum all-reduce
+# after the ADC epilogue.  DERIVED from the single source of truth —
+# sharding._ROW_PARALLEL_PARENTS (param-tree names) — through the
+# name->policy-tag-leaf map, so adding a row-parallel projection to one
+# layer without the other fails loudly at import instead of silently
+# cutting the image against the grain of its weight's placement.
+_PARENT_TO_TAG_LEAF = {"down": "down", "wo": "o", "out": "out",
+                       "out_proj": "out_proj", "w_ukv": "ukv"}
+
+
+def _row_parallel_leaves() -> tuple:
+    from repro.distributed.sharding import _ROW_PARALLEL_PARENTS
+
+    return tuple(_PARENT_TO_TAG_LEAF[p] for p in _ROW_PARALLEL_PARENTS)
+
+
+_ROW_PARALLEL_LEAVES = _row_parallel_leaves()
+
+
+def partition_for(tag: str, n: int, m: int, shards: int) -> Optional[str]:
+    """How one projection splits across ``shards`` model-axis devices.
+
+    Column-parallel by default (bit planes split along M: every device
+    owns ``m/shards`` output columns of the SAME rows — no collective,
+    the chip's own column-parallel layout scaled out); row-parallel for
+    the second GEMM of each Megatron pair (split along N, all-reduce
+    after the ADC epilogue).  Falls back to the other axis when the
+    preferred dim is not divisible, and to ``None`` (replicated) when
+    neither divides.  Projections consumed under ``vmap`` (MoE expert
+    stacks, whisper's per-layer cross-attention) stay unpartitioned —
+    their mapped axis is the natural EP/layer shard, not M/N.
+    """
+    if shards <= 1:
+        return None
+    if tag in _MOE_EXPERT.values() or tag.startswith("cross."):
+        return None
+    leaf = tag.rsplit(".", 1)[-1]
+    if leaf in _ROW_PARALLEL_LEAVES:
+        if n % shards == 0:
+            return "row"
+        return "col" if m % shards == 0 else None
+    if m % shards == 0:
+        return "col"
+    return "row" if n % shards == 0 else None
+
+
+def _compile_image(w: jax.Array, spec, path: str,
+                   shards: int = 1,
+                   partition: Optional[str] = None) -> CimaImage:
     """Quantize + decompose one projection (possibly stacked) into planes.
 
     Applies exactly the per-matrix quantization the on-the-fly backends
     apply per call (vmapped over stacked copies), so reconstruction at
-    dispatch is bit-identical.
+    dispatch is bit-identical.  ``partition``/``shards`` only change the
+    *accounting* (tiles/segments are per-device shard sizes) and the
+    metadata dispatch uses to route through ``shard_map`` — the stored
+    planes are the full logical arrays; placement is a sharding.
     """
     lead = w.shape[:-2]
     n, m = int(w.shape[-2]), int(w.shape[-1])
@@ -157,12 +217,17 @@ def _compile_image(w: jax.Array, spec, path: str) -> CimaImage:
     else:
         copies = 1
         ws, wq, scale = one(w)
+    devices = shards if partition in ("col", "row") else 1
+    n_loc = n // devices if partition == "row" else n
+    m_loc = m // devices if partition == "col" else m
     return CimaImage(
         ws=ws, wq=wq, scale=scale, path=path, tag=spec.tag, ba=spec.ba,
         coding=Coding(spec.coding), per_channel=spec.per_channel,
         n=n, m=m, copies=copies,
-        tiles=image_tiles(n, m, spec.ba),
-        segments=image_segments(n, m, spec.ba),
+        tiles=image_tiles(n_loc, m_loc, spec.ba),
+        segments=image_segments(n_loc, m_loc, spec.ba),
+        partition=partition if devices > 1 else None,
+        devices=devices,
     )
 
 
@@ -273,8 +338,9 @@ class CimaProgram:
     """
 
     images: dict
-    capacity_tiles: Optional[int] = None    # None = unbounded array
+    capacity_tiles: Optional[int] = None    # None = unbounded array (PER DEVICE)
     version: int = 0
+    model_shards: int = 1                   # mesh "model"-axis size at build
 
     def __bool__(self) -> bool:
         return bool(self.images)
@@ -307,6 +373,9 @@ class CimaProgram:
         return {
             "images": len(self.images),
             "copies": sum(i.copies for i in self.images.values()),
+            "model_shards": self.model_shards,
+            "partitioned": sum(1 for i in self.images.values()
+                               if i.partition is not None),
             "capacity_tiles": self.capacity_tiles,
             "capacity_bits": (None if self.capacity_tiles is None else
                               self.capacity_tiles * E.CIMA_ROWS * E.CIMA_COLS),
@@ -321,23 +390,35 @@ class CimaProgram:
 
 
 def build_program(params, cfg, capacity_chips: Optional[int] = None,
-                  version: int = 0) -> CimaProgram:
+                  version: int = 0, mesh=None,
+                  model_shards: Optional[int] = None) -> CimaProgram:
     """Compile every policy-managed projection of ``params`` into a
     :class:`CimaImage` and place the images on the virtual array.
 
     ``capacity_chips`` bounds the standing allocation to that many
-    2304x256 (590kb) CIMA macros; ``None`` means every image is resident
-    (single-load).  Placement is first-fit in model order — the paper's
-    own strategy of keeping the hottest, earliest-touched matrices
-    stationary and streaming the tail.
+    2304x256 (590kb) CIMA macros **per device**; ``None`` means every
+    image is resident (single-load).  Placement is first-fit in model
+    order — the paper's own strategy of keeping the hottest,
+    earliest-touched matrices stationary and streaming the tail.
+
+    ``mesh`` (a :class:`jax.sharding.Mesh` with a ``"model"`` axis) or
+    ``model_shards`` turns on the multi-chip mapping (DESIGN.md §9):
+    each projection is partitioned per :func:`partition_for`, its
+    tiles/segments become per-device shard sizes, and residency is
+    decided against the per-device ``capacity_chips`` budget — a
+    projection that streams on 1 device can be resident on 8.
     """
+    shards = int(model_shards) if model_shards is not None else (
+        int(dict(mesh.shape).get("model", 1)) if mesh is not None else 1)
     images: dict = {}
     used = 0
     for path, key, tag, kind, w in _walk(params, cfg):
         spec = cfg.policy.resolve(tag, kind=kind)
         if spec.backend not in PROGRAM_BACKENDS:
             continue
-        img = _compile_image(w, spec, _path_str(path, key))
+        part = partition_for(tag, int(w.shape[-2]), int(w.shape[-1]), shards)
+        img = _compile_image(w, spec, _path_str(path, key),
+                             shards=shards, partition=part)
         need = img.tiles * img.copies
         if capacity_chips is not None and used + need > capacity_chips:
             img = dataclasses.replace(img, resident=False)
@@ -345,7 +426,7 @@ def build_program(params, cfg, capacity_chips: Optional[int] = None,
             used += need
         images[img.path] = img
     return CimaProgram(images=images, capacity_tiles=capacity_chips,
-                       version=version)
+                       version=version, model_shards=shards)
 
 
 def _set_in(tree, path: tuple, key, value):
@@ -428,9 +509,12 @@ class ProgramManager:
     snapshot, not per forward.
     """
 
-    def __init__(self, cfg, capacity_chips: Optional[int] = None):
+    def __init__(self, cfg, capacity_chips: Optional[int] = None,
+                 mesh=None, model_shards: Optional[int] = None):
         self.cfg = cfg
         self.capacity_chips = capacity_chips
+        self.mesh = mesh
+        self.model_shards = model_shards
         self._program: Optional[CimaProgram] = None
         self._dirty = True
         self.version = 0
@@ -445,6 +529,7 @@ class ProgramManager:
             self.version += 1
             self._program = build_program(
                 params, self.cfg, capacity_chips=self.capacity_chips,
-                version=self.version)
+                version=self.version, mesh=self.mesh,
+                model_shards=self.model_shards)
             self._dirty = False
         return self._program

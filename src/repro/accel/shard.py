@@ -1,0 +1,152 @@
+"""Mesh-sharded ("multi-chip") execution of compiled CIMA programs.
+
+One 65nm chip aligns storage and compute spatially across its 16 banks;
+this module does the same across *devices*: a compiled
+:class:`~repro.accel.program.CimaImage` whose ``partition`` metadata says
+how its bit planes split over the mesh ``"model"`` axis is executed under
+:func:`jax.experimental.shard_map.shard_map`, one per-device tile of the
+program per chip (DESIGN.md §9):
+
+* ``"col"`` (column-parallel): every device holds ``m/devices`` output
+  columns of ALL rows.  The input vector is broadcast (replicated), each
+  device evaluates its own columns — bank grid, ADC epilogue and
+  near-memory accumulation entirely local — and the outputs concatenate.
+  No collective on the MVM itself.
+* ``"row"`` (row-parallel): every device holds ``n/devices`` contraction
+  rows of ALL columns.  The input splits along N, each device runs its
+  local banks *and its own ADC epilogue* (each chip digitizes its own
+  column sums — exactly the physical multi-chip behaviour), and the
+  digital partial sums are combined with a single ``psum`` all-reduce.
+
+Input quantization is GLOBAL (outside ``shard_map``): the dynamic
+per-tensor input scale must be computed from the full activation, exactly
+as the single-chip path does — sharding must never change the operand
+grid.  Likewise the final ``rescale`` runs on the combined integer
+result with the image's (global) weight scales.
+
+The Pallas ``cima_mvm`` kernel composes directly: inside the body it sees
+the local ``[N_loc, BA, M_loc]`` planes, so its bank grid dimension *is*
+the per-device tile.
+
+Trace semantics (no per-shard double-counting): the dispatcher records
+ONE logical :class:`~repro.accel.context.MvmRecord` per matmul — with the
+full logical (n, m) plus ``devices``/``partition`` — *before* entering
+``shard_map``; nothing records inside the body.  Total MVM counts and
+image loads therefore match the unsharded trace exactly, and
+:func:`~repro.accel.context.energy_summary` derives per-device wall
+cycles from the local tile and system energy by summing shards.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _x_spec(ndim: int, partition: str) -> P:
+    if partition == "row":
+        return P(*([None] * (ndim - 1) + ["model"]))
+    return P()
+
+
+def _out_spec(ndim: int, partition: str) -> P:
+    if partition == "col":
+        return P(*([None] * (ndim - 1) + ["model"]))
+    return P()
+
+
+def _ws_spec(partition: str) -> P:
+    # ws layout [N, BA, M]
+    return P("model", None, None) if partition == "row" \
+        else P(None, None, "model")
+
+
+def _wq_spec(partition: str) -> P:
+    # wq layout [N, M]
+    return P("model", None) if partition == "row" else P(None, "model")
+
+
+def sharded_program_matmul(x: jax.Array, spec, image, mesh,
+                           key: Optional[jax.Array] = None) -> jax.Array:
+    """``x @ w`` from a partitioned compiled image, under ``shard_map``.
+
+    ``image.partition`` must be ``"col"`` or ``"row"`` and
+    ``mesh.shape["model"] == image.devices`` (the dispatcher checks).
+    Returns float32, same contract as the on-the-fly backends.
+    """
+    from repro.distributed.autoshard import manual
+
+    from .backends import quantize_input, rescale
+
+    part = image.partition
+    assert part in ("col", "row"), part
+    # dynamic-operand quantization on the FULL activation (global scale)
+    qx = quantize_input(x, spec)
+
+    # one scaffold (psum placement, manual() scoping, in/out specs) for
+    # every backend — only the local tile compute differs
+    if spec.backend == "digital_int":
+        operands = (image.wq,)
+        w_specs = (_wq_spec(part),)
+
+        def local(xq, wq):
+            return jnp.einsum("...n,nm->...m", xq.astype(jnp.float32),
+                              wq.astype(jnp.float32))
+
+    elif spec.backend in ("bpbs", "bpbs_ref"):
+        from repro.core.bpbs import (bpbs_matmul_planes,
+                                     bpbs_matmul_planes_reference)
+
+        bcfg = spec.bpbs()
+        has_key = spec.backend == "bpbs" and key is not None
+        operands = (image.ws,) + ((key,) if has_key else ())
+        w_specs = (_ws_spec(part),) + ((P(),) if has_key else ())
+
+        def local(xq, ws, *k):
+            # local banks AND local ADC epilogue: each chip digitizes its
+            # own column sums before the digital partial-sum all-reduce.
+            # Each chip has its own ADCs: fold the device index into the
+            # noise key so shards draw INDEPENDENT noise fields (a
+            # replicated key would correlate the chips bit-for-bit).
+            kd = None
+            if k:
+                kd = jax.random.fold_in(k[0],
+                                        jax.lax.axis_index("model"))
+            if spec.backend == "bpbs":
+                return bpbs_matmul_planes(xq, ws, bcfg, kd)
+            return bpbs_matmul_planes_reference(xq, ws, bcfg)
+
+    elif spec.backend == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        bcfg = spec.bpbs()
+        operands = (image.ws,)
+        w_specs = (_ws_spec(part),)
+
+        def local(xq, ws):
+            # the kernel's bank grid dimension is the per-device tile
+            return kernel_ops.cima_mvm_from_planes(
+                xq, ws, bcfg, interpret=spec.interpret)
+
+    else:
+        raise ValueError(
+            f"backend {spec.backend!r} has no shard_map execution path; "
+            "mesh-partitioned images support "
+            "digital_int / bpbs / bpbs_ref / pallas")
+
+    def body(xq, *ops):
+        y = local(xq, *ops)
+        if part == "row":
+            y = jax.lax.psum(y, "model")
+        return y
+
+    ndim = qx.q.ndim
+    with manual():
+        y_int = shard_map(
+            body, mesh=mesh, in_specs=(_x_spec(ndim, part),) + w_specs,
+            out_specs=_out_spec(ndim, part), check_rep=False,
+        )(qx.q, *operands)
+    return rescale(y_int, qx.scale, image.scale, spec)

@@ -1,0 +1,16 @@
+"""Distribution layer: divisibility-aware sharding rules, the explicit
+:class:`ShardPolicy`, and the ambient-mesh activation constraints."""
+from .autoshard import (cs, get_mesh, get_shard_policy, manual, set_mesh,
+                        use_mesh)
+from .sharding import (ShardPolicy, batch_specs, cache_specs, param_specs,
+                       state_specs)
+
+# NOTE: sharding.DEFAULT_POLICY is deliberately NOT re-exported: the
+# deprecated set_policy() shim rebinds it, and a by-value re-export would
+# go stale.  Read it live via repro.distributed.sharding.DEFAULT_POLICY
+# (or better: thread an explicit ShardPolicy).
+__all__ = [
+    "ShardPolicy", "param_specs", "batch_specs", "cache_specs",
+    "state_specs", "cs", "get_mesh", "get_shard_policy", "manual",
+    "set_mesh", "use_mesh",
+]

@@ -28,34 +28,59 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 _STATE = threading.local()
 
 
-def set_mesh(mesh: Optional[Mesh]):
+def set_mesh(mesh: Optional[Mesh], policy=None):
+    """Set the ambient mesh (and optionally the ambient
+    :class:`~repro.distributed.sharding.ShardPolicy` resolved by ``cs``)."""
     _STATE.mesh = mesh
+    _STATE.policy = policy
 
 
 def get_mesh() -> Optional[Mesh]:
     return getattr(_STATE, "mesh", None)
 
 
+def get_shard_policy():
+    """The ambient ShardPolicy (falls back to the module default)."""
+    from .sharding import resolve_policy
+
+    return resolve_policy(getattr(_STATE, "policy", None))
+
+
 @contextlib.contextmanager
-def use_mesh(mesh: Mesh):
+def use_mesh(mesh: Mesh, policy=None):
     prev = get_mesh()
-    set_mesh(mesh)
+    prev_pol = getattr(_STATE, "policy", None)
+    set_mesh(mesh, policy)
     try:
         yield
     finally:
-        set_mesh(prev)
+        set_mesh(prev, prev_pol)
 
 
-def _resolve(name, mesh):
-    from .sharding import get_policy
+@contextlib.contextmanager
+def manual():
+    """Scope marking manual (shard_map) execution: inside it ``cs`` is a
+    no-op, because the mesh axes are already manual and
+    ``with_sharding_constraint`` over them is meaningless/illegal.  The
+    mesh-sharded accel dispatch (repro.accel.shard) wraps its shard_map
+    bodies in this."""
+    prev = getattr(_STATE, "manual", False)
+    _STATE.manual = True
+    try:
+        yield
+    finally:
+        _STATE.manual = prev
 
+
+def in_manual() -> bool:
+    return getattr(_STATE, "manual", False)
+
+
+def _resolve(name, mesh, policy):
     if name == "dp":
-        if get_policy() == "fsdp":
-            return tuple(a for a in ("pod", "data", "model")
-                         if a in mesh.axis_names)
-        return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        return policy.dp_axes(mesh)
     if name == "tp":
-        return () if get_policy() == "fsdp" else ("model",)
+        return () if policy.is_fsdp else ("model",)
     if name == "fsdp":
         return ("data",)
     return (name,)
@@ -66,8 +91,9 @@ def cs(x: jax.Array, cands: Sequence) -> jax.Array:
     candidate (str), list of candidates, or None.  First divisible & unused
     candidate wins; everything else replicates."""
     mesh = get_mesh()
-    if mesh is None:
+    if mesh is None or in_manual():
         return x
+    policy = get_shard_policy()
     used: set = set()
     spec = []
     for dim, cand in zip(x.shape, list(cands) + [None] * (x.ndim - len(cands))):
@@ -75,7 +101,7 @@ def cs(x: jax.Array, cands: Sequence) -> jax.Array:
             [cand] if isinstance(cand, str) else list(cand))
         chosen = None
         for name in options:
-            axes = _resolve(name, mesh)
+            axes = _resolve(name, mesh, policy)
             if not axes:
                 continue
             if any(a in used or a not in mesh.axis_names for a in axes):

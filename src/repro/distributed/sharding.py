@@ -16,31 +16,84 @@ Layout conventions (DESIGN.md §6):
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Any, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-# Distribution policy (§Perf knob):
-#   "2d"   — TP on "model" + FSDP/DP on "data" (baseline; right for models
-#            whose per-layer GEMMs are large relative to activations)
-#   "fsdp" — no tensor parallelism: batch shards over ALL axes and params
-#            fully shard over ("data","model") ZeRO-3 style.  Right for
-#            small models (e.g. 1B at 1M-token batches) where TP
-#            all-reduces of the residual stream dwarf the param traffic.
-_POLICY = "2d"
+
+@dataclasses.dataclass(frozen=True)
+class ShardPolicy:
+    """Distribution policy (§Perf knob), carried explicitly through configs.
+
+    ``mode``:
+      "2d"   — TP on "model" + FSDP/DP on "data" (baseline; right for
+               models whose per-layer GEMMs are large relative to
+               activations)
+      "fsdp" — no tensor parallelism: batch shards over ALL axes and
+               params fully shard over ("data","model") ZeRO-3 style.
+               Right for small models (e.g. 1B at 1M-token batches) where
+               TP all-reduces of the residual stream dwarf the param
+               traffic.
+
+    A value object instead of the old module global: a training run and a
+    concurrently-live serving engine (or two engines) can hold different
+    policies without clobbering each other.  Every spec function below
+    takes ``policy=``; ``None`` falls back to :data:`DEFAULT_POLICY`.
+    """
+
+    mode: str = "2d"
+
+    def __post_init__(self):
+        if self.mode not in ("2d", "fsdp"):
+            raise ValueError(f"ShardPolicy mode must be '2d' or 'fsdp', "
+                             f"got {self.mode!r}")
+
+    @property
+    def is_fsdp(self) -> bool:
+        return self.mode == "fsdp"
+
+    def dp_axes(self, mesh: Mesh):
+        if self.is_fsdp:
+            return tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        # filtered by the mesh: a serving mesh may be model-only
+        return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def fsdp_axes(self, mesh: Mesh):
+        if self.is_fsdp:
+            return tuple(a for a in ("data", "model")
+                         if a in mesh.axis_names)
+        return tuple(a for a in ("data",) if a in mesh.axis_names)
+
+
+DEFAULT_POLICY = ShardPolicy("2d")
+
+
+def resolve_policy(policy: Optional[ShardPolicy]) -> ShardPolicy:
+    """``policy`` if given, else the (deprecated-shim-mutable) default."""
+    return DEFAULT_POLICY if policy is None else policy
 
 
 def set_policy(policy: str):
-    global _POLICY
-    assert policy in ("2d", "fsdp")
-    _POLICY = policy
+    """DEPRECATED: mutate the module default.  Pass an explicit
+    :class:`ShardPolicy` via the ``policy=`` kwarg / configs instead."""
+    global DEFAULT_POLICY
+    warnings.warn("set_policy() is deprecated; pass ShardPolicy(policy) "
+                  "explicitly (e.g. ServeConfig.shard_policy, "
+                  "autoshard.set_mesh(mesh, policy))", DeprecationWarning,
+                  stacklevel=2)
+    DEFAULT_POLICY = ShardPolicy(policy)
 
 
 def get_policy() -> str:
-    return _POLICY
+    """DEPRECATED: the module-default policy mode."""
+    warnings.warn("get_policy() is deprecated; thread a ShardPolicy "
+                  "explicitly", DeprecationWarning, stacklevel=2)
+    return DEFAULT_POLICY.mode
 
 
 def axis_size(mesh: Mesh, axes) -> int:
@@ -51,17 +104,12 @@ def axis_size(mesh: Mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
-def dp_axes(mesh: Mesh):
-    if _POLICY == "fsdp":
-        return tuple(a for a in ("pod", "data", "model")
-                     if a in mesh.axis_names)
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+def dp_axes(mesh: Mesh, policy: Optional[ShardPolicy] = None):
+    return resolve_policy(policy).dp_axes(mesh)
 
 
-def fsdp_axes(mesh: Mesh):
-    if _POLICY == "fsdp":
-        return tuple(a for a in ("data", "model") if a in mesh.axis_names)
-    return ("data",)
+def fsdp_axes(mesh: Mesh, policy: Optional[ShardPolicy] = None):
+    return resolve_policy(policy).fsdp_axes(mesh)
 
 
 def pick_spec(shape: Sequence[int], mesh: Mesh,
@@ -94,11 +142,11 @@ def pick_spec(shape: Sequence[int], mesh: Mesh,
 _ROW_PARALLEL_PARENTS = ("down", "wo", "out", "out_proj", "w_ukv")
 
 
-def _param_rule(path: str, shape) -> list:
+def _param_rule(path: str, shape, policy: ShardPolicy) -> list:
     """Candidate lists for the TRAILING dims; leading (scan/stack) dims get
     none.  Returns the full candidate list, aligned right."""
     nd = len(shape)
-    if _POLICY == "fsdp":
+    if policy.is_fsdp:
         # ZeRO-3: fully shard the largest trailing dim over data+model,
         # falling back to the other dim / the data axis alone
         zero3 = [("data", "model"), ("model",), ("data",)]
@@ -132,11 +180,74 @@ def _param_rule(path: str, shape) -> list:
     return lead + trail
 
 
-def param_specs(shapes_tree, mesh: Mesh):
-    """ShapeDtypeStruct tree -> NamedSharding tree (path-based rules)."""
+# ------------------------------------------------- compiled weight images
+
+def _image_leaf_spec(pstr: str, shape, program, mesh: Mesh) -> Optional[P]:
+    """PartitionSpec for one leaf of an installed CimaImage, or None.
+
+    Image leaves live at ``...['cima'].ws`` (``linear``/``unembed``
+    installs) or ``...['cima']['gate'].ws`` (MoE expert installs); the
+    container path matches the image's key in ``program.images``.  The
+    image's compile-time ``partition`` decides the layout:
+
+    * ``"col"`` — bit planes split along M (output columns): ``ws``
+      [..., N, BA, M] and ``wq`` [..., N, M] on the last dim; a
+      per-channel ``scale`` [..., 1, M] likewise.
+    * ``"row"`` — split along N (contraction rows): ``ws`` on dim -3,
+      ``wq`` on dim -2, ``scale`` replicated.
+    * ``None``  — replicated (unsharded image, or a mesh the image was
+      not compiled for).
+    """
+    import re
+
+    tokens = [a or b for a, b in
+              re.findall(r"\['([^']+)'\]|\.([A-Za-z_]\w*)", pstr)]
+    if "cima" not in tokens:
+        return None
+    field = tokens[-1]
+    key = ".".join(tokens[:-1])
+    img = program.images.get(key)
+    if img is None or field not in ("ws", "wq", "scale"):
+        return None
+    part = getattr(img, "partition", None)
+    if part not in ("col", "row") or getattr(img, "devices", 1) <= 1 \
+            or "model" not in mesh.axis_names \
+            or mesh.shape["model"] != img.devices:
+        return P()
+    nd = len(shape)
+    spec = [None] * nd
+    if part == "col":
+        if field == "scale" and not img.per_channel:
+            return P()
+        spec[nd - 1] = "model"
+    else:
+        if field == "ws":
+            spec[nd - 3] = "model"
+        elif field == "wq":
+            spec[nd - 2] = "model"
+        # row-parallel per-channel scale is over M: replicated
+    return P(*spec)
+
+
+def param_specs(shapes_tree, mesh: Mesh,
+                policy: Optional[ShardPolicy] = None, program=None):
+    """ShapeDtypeStruct tree -> NamedSharding tree (path-based rules).
+
+    ``program`` (a :class:`repro.accel.program.CimaProgram`) adds rules
+    for installed :class:`~repro.accel.program.CimaImage` leaves: images
+    compiled with a mesh partition shard along the axis the partition
+    names; everything else about them replicates.  Without ``program``,
+    image leaves fall through the weight rules and replicate.
+    """
+    pol = resolve_policy(policy)
+
     def one(path, leaf):
         pstr = jax.tree_util.keystr(path)
-        cands = _param_rule(pstr, leaf.shape)
+        if program is not None:
+            ispec = _image_leaf_spec(pstr, leaf.shape, program, mesh)
+            if ispec is not None:
+                return NamedSharding(mesh, ispec)
+        cands = _param_rule(pstr, leaf.shape, pol)
         return NamedSharding(mesh, pick_spec(leaf.shape, mesh, cands))
 
     return jax.tree_util.tree_map_with_path(one, shapes_tree)
@@ -144,8 +255,9 @@ def param_specs(shapes_tree, mesh: Mesh):
 
 # ------------------------------------------------------------------ batch
 
-def batch_specs(batch_shapes, mesh: Mesh, batch_size: int):
-    dp = dp_axes(mesh)
+def batch_specs(batch_shapes, mesh: Mesh, batch_size: int,
+                policy: Optional[ShardPolicy] = None):
+    dp = dp_axes(mesh, policy)
 
     def one(leaf):
         cands = [[dp] if d == batch_size else [] for d in leaf.shape]
@@ -156,10 +268,22 @@ def batch_specs(batch_shapes, mesh: Mesh, batch_size: int):
 
 # ------------------------------------------------------------------ cache
 
-def cache_specs(cache_shapes, mesh: Mesh, batch_size: int):
+def cache_specs(cache_shapes, mesh: Mesh, batch_size: int,
+                policy: Optional[ShardPolicy] = None):
     """Generic: DP on the batch dim, TP ("model") on the largest divisible
-    non-batch dim.  Covers KV caches, MLA latents, LRU/SSM states."""
-    dp = dp_axes(mesh)
+    non-batch dim.  Covers KV caches, MLA latents, LRU/SSM states.
+
+    ``batch_size == 1`` (the batch-1 slot caches single-request admission
+    prefills produce) is deterministic by definition: the FIRST size-1
+    dimension is the batch dim — batch is dim 0 of prefix/suffix leaves
+    and dim 1 of scanned leaves (behind the layer axis, which is >1
+    whenever it exists as a scan), so the first size-1 dim is the batch
+    in both layouts.  It is excluded from model-axis candidacy (dim 0 of
+    a scanned leaf can no longer be claimed by "model") and, being size
+    1, never takes a DP axis — so a batch-1 slot cache gets the same
+    non-batch layout as the live batch cache it will be spliced into.
+    """
+    dp = dp_axes(mesh, policy)
     msize = axis_size(mesh, ("model",))
 
     def one(leaf):
@@ -167,7 +291,7 @@ def cache_specs(cache_shapes, mesh: Mesh, batch_size: int):
         if not shape:
             return NamedSharding(mesh, P())
         try:
-            bdim = shape.index(batch_size) if batch_size > 1 else -1
+            bdim = shape.index(batch_size)
         except ValueError:
             bdim = -1
         # largest divisible non-batch dim for the model axis
@@ -176,7 +300,7 @@ def cache_specs(cache_shapes, mesh: Mesh, batch_size: int):
         mdim = max(cand_dims, key=lambda i: shape[i]) if cand_dims else -1
         spec = []
         for i, d in enumerate(shape):
-            if i == bdim and d % axis_size(mesh, dp) == 0:
+            if i == bdim and dp and d % axis_size(mesh, dp) == 0:
                 spec.append(dp if len(dp) > 1 else dp[0])
             elif i == mdim:
                 spec.append("model")
@@ -191,16 +315,17 @@ def cache_specs(cache_shapes, mesh: Mesh, batch_size: int):
 
 # ------------------------------------------------------------------ state
 
-def state_specs(state_shapes, mesh: Mesh):
+def state_specs(state_shapes, mesh: Mesh,
+                policy: Optional[ShardPolicy] = None):
     """TrainState: params/mu/nu share param rules; scalars replicate."""
     from repro.train.state import TrainState
 
-    pspec = param_specs(state_shapes.params, mesh)
-    mspec = param_specs(state_shapes.opt.mu, mesh)
-    nspec = param_specs(state_shapes.opt.nu, mesh)
+    pspec = param_specs(state_shapes.params, mesh, policy)
+    mspec = param_specs(state_shapes.opt.mu, mesh, policy)
+    nspec = param_specs(state_shapes.opt.nu, mesh, policy)
     rep = NamedSharding(mesh, P())
     err = (None if state_shapes.error is None
-           else param_specs(state_shapes.error, mesh))
+           else param_specs(state_shapes.error, mesh, policy))
     from repro.optim.adamw import OptState
 
     return TrainState(

@@ -118,8 +118,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         cfg = cfg.with_accel(backend=backend)
     # §Perf hillclimb knobs: "--opt attn_scan_remat=1,onehot_embed=1,mb=4"
     mb_override = None
+    shard_policy = None                  # explicit ShardPolicy (no global)
     if opts:
         import dataclasses
+
+        from repro.distributed.sharding import ShardPolicy
 
         kw = {}
         for kv in opts.split(","):
@@ -129,8 +132,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             elif k in ("attn_scan_remat", "onehot_embed", "attn_bf16_probs", "sp_residual"):
                 kw[k] = bool(int(v))
             elif k == "policy":
-                from repro.distributed.sharding import set_policy
-                set_policy(v)
+                shard_policy = ShardPolicy(v)
             else:
                 raise ValueError(f"unknown opt {k}")
         if kw:
@@ -144,26 +146,27 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.monotonic()
     mesh = make_production_mesh(multi_pod=multi_pod)
     from repro.distributed import autoshard
-    autoshard.set_mesh(mesh)
+    autoshard.set_mesh(mesh, shard_policy)
     key = jax.random.PRNGKey(0)
     max_seq = shape.seq if shape.kind != "train" else 4096
 
     params_shapes = jax.eval_shape(
         lambda k: init_params(cfg, k, max_seq=max_seq), key)
-    param_sh = shd.param_specs(params_shapes, mesh)
+    param_sh = shd.param_specs(params_shapes, mesh, shard_policy)
 
     with mesh:
         if shape.kind == "train":
             state_shapes = jax.eval_shape(
                 lambda k: init_train_state(
                     init_params(cfg, k, max_seq=max_seq)), key)
-            state_sh = shd.state_specs(state_shapes, mesh)
+            state_sh = shd.state_specs(state_shapes, mesh, shard_policy)
             batch_shapes = {"tokens": jax.ShapeDtypeStruct(
                 (shape.batch, shape.seq), jnp.int32)}
             if cfg.frontend != "none":
                 batch_shapes["frontend_embeds"] = jax.ShapeDtypeStruct(
                     (shape.batch, cfg.frontend_seq, cfg.d_model), jnp.float32)
-            batch_sh = shd.batch_specs(batch_shapes, mesh, shape.batch)
+            batch_sh = shd.batch_specs(batch_shapes, mesh, shape.batch,
+                                       shard_policy)
             mb = mb_override or TRAIN_MICROBATCHES.get(arch, 1)
             step = build_train_step(cfg, AdamWConfig(), microbatches=mb)
             jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
@@ -177,12 +180,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
         elif shape.kind == "prefill":
             tok = jax.ShapeDtypeStruct((shape.batch, shape.seq), jnp.int32)
-            tok_sh = shd.batch_specs(tok, mesh, shape.batch)
+            tok_sh = shd.batch_specs(tok, mesh, shape.batch,
+                                     shard_policy)
             fe = fe_sh = None
             if cfg.frontend != "none":
                 fe = jax.ShapeDtypeStruct(
                     (shape.batch, cfg.frontend_seq, cfg.d_model), jnp.float32)
-                fe_sh = shd.batch_specs(fe, mesh, shape.batch)
+                fe_sh = shd.batch_specs(fe, mesh, shape.batch,
+                                        shard_policy)
 
             def fn(params, tokens, fe):
                 return prefill(params, tokens, cfg, shape.seq, fe)
@@ -206,9 +211,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                      cfg.n_kv_heads, cfg.hd),
                     jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
                 cache_shapes = cache_shapes._replace(cross_kv=(kv, kv))
-            cache_sh = shd.cache_specs(cache_shapes, mesh, shape.batch)
+            cache_sh = shd.cache_specs(cache_shapes, mesh, shape.batch,
+                                       shard_policy)
             tok = jax.ShapeDtypeStruct((shape.batch,), jnp.int32)
-            tok_sh = shd.batch_specs(tok, mesh, shape.batch)
+            tok_sh = shd.batch_specs(tok, mesh, shape.batch,
+                                     shard_policy)
 
             def fn(params, token, cache):
                 return decode_step(params, token, cache, cfg)

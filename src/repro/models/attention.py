@@ -36,11 +36,11 @@ def _attn_tp_mode(kv: int, g: int, sq: int, d: int) -> str:
     fall back to replicated activations against sharded weights and XLA
     emits a full score all-reduce PER CHUNK STEP — 550 GB/device on
     llama3.2 train_4k (EXPERIMENTS.md §Perf iteration 1)."""
-    from repro.distributed.sharding import get_policy
+    from repro.distributed.autoshard import get_shard_policy
 
     mesh = get_mesh()
     if mesh is None or "model" not in mesh.axis_names \
-            or get_policy() == "fsdp":
+            or get_shard_policy().is_fsdp:
         return "none"
     m = mesh.shape["model"]
     if m <= 1:

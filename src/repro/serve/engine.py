@@ -37,40 +37,89 @@ class ServeConfig:
     # weight-stationary CIMA program (repro.accel.program): compile every
     # quantized projection's bit planes ONCE at engine init so decode
     # steps never re-quantize weights.  cima_chips bounds the standing
-    # allocation (N x 590kb arrays); None = everything resident.
+    # allocation (N x 590kb arrays PER DEVICE); None = everything resident.
     use_program: bool = True
     cima_chips: Optional[int] = None
+    # multi-chip mesh serving (DESIGN.md §9): a jax Mesh with a "model"
+    # axis.  The program compiles partitioned (column-parallel images
+    # split along M, row-parallel along N with a psum after the ADC
+    # epilogue), params/images/caches are placed with the sharding rules,
+    # and every jitted engine function traces under this mesh.  The
+    # ShardPolicy is explicit — a concurrently-live trainer or second
+    # engine can hold a different one (no module-global policy).
+    mesh: Optional[object] = None               # jax.sharding.Mesh
+    shard_policy: Optional[object] = None       # distributed.ShardPolicy
 
 
 class Engine:
     def __init__(self, params, cfg, serve_cfg: ServeConfig):
         self.cfg = cfg
         self.scfg = serve_cfg
+        self.mesh = serve_cfg.mesh
         # program load: the paper's weight-stationary step.  For an
         # all-digital policy the program is empty and params pass through
         # untouched; otherwise every managed projection's image installs
         # into the param tree and prefill/decode/splice all reuse it.
+        # With a mesh, the program compiles PARTITIONED (per-device image
+        # tiles, per-device capacity budget) and params + images are
+        # placed with the sharding rules before any jit traces.
         from repro.accel import build_program, install_program
 
         self.program = None
         if serve_cfg.use_program:
             program = build_program(params, cfg,
-                                    capacity_chips=serve_cfg.cima_chips)
+                                    capacity_chips=serve_cfg.cima_chips,
+                                    mesh=self.mesh)
             if program:
                 self.program = program
                 params = install_program(params, program, cfg)
+        if self.mesh is not None:
+            from repro.distributed import sharding as shd
+
+            specs = shd.param_specs(jax.eval_shape(lambda: params),
+                                    self.mesh, serve_cfg.shard_policy,
+                                    program=self.program)
+            params = jax.device_put(params, specs)
         self.params = params
-        self._prefill = jax.jit(
-            lambda p, t, fe: prefill(p, t, cfg, serve_cfg.max_seq, fe))
+        self._prefill = jax.jit(self._meshed(
+            lambda p, t, fe: prefill(p, t, cfg, serve_cfg.max_seq, fe)))
         # pad-masked variant for ragged admission (one compile per bucket
         # length — jit caches per shape)
-        self._prefill_padded = jax.jit(
+        self._prefill_padded = jax.jit(self._meshed(
             lambda p, t, m: prefill(p, t, cfg, serve_cfg.max_seq,
-                                    pad_mask=m))
-        self._decode = jax.jit(
-            lambda p, tok, cache: decode_step(p, tok, cache, cfg),
+                                    pad_mask=m)))
+        self._decode = jax.jit(self._meshed(
+            lambda p, tok, cache: decode_step(p, tok, cache, cfg)),
             donate_argnums=2)
         self._base_key = jax.random.PRNGKey(serve_cfg.seed)
+
+    def _meshed(self, fn):
+        """Trace ``fn`` under the engine's mesh + shard policy (ambient
+        for ``cs`` constraints and the shard_map program dispatch).  The
+        context manager is active at TRACE time, which is when dispatch
+        and the sharding constraints consult it; scoping it per engine —
+        rather than mutating process state at init — is what lets two
+        engines (or an engine and a trainer) disagree."""
+        if self.mesh is None:
+            return fn
+        from repro.distributed.autoshard import use_mesh
+
+        def wrapped(*args):
+            with use_mesh(self.mesh, self.scfg.shard_policy):
+                return fn(*args)
+        return wrapped
+
+    def init_cache(self, batch: int):
+        """A fresh (mesh-placed) decode cache at full batch width."""
+        cache = init_cache(self.cfg, batch, self.scfg.max_seq)
+        if self.mesh is not None:
+            from repro.distributed import sharding as shd
+
+            specs = shd.cache_specs(jax.eval_shape(lambda: cache),
+                                    self.mesh, batch,
+                                    self.scfg.shard_policy)
+            cache = jax.device_put(cache, specs)
+        return cache
 
     def sample(self, logits, request_ids, steps):
         """Sample next tokens [B].  Greedy at temperature 0; otherwise each
@@ -158,8 +207,12 @@ class ContinuousBatcher:
         self.stats = {"decode_steps": 0, "slot_steps": 0, "prefills": 0,
                       "generated_tokens": 0}
         # donated jit: splicing one slot must be an in-place scatter on the
-        # live batch cache, not a full cache copy per admission
-        self._splice = jax.jit(splice_slot, donate_argnums=0)
+        # live batch cache, not a full cache copy per admission.  Traced
+        # under the engine's mesh so splicing a batch-1 cache into a
+        # sharded live cache keeps the sharded layout (the batch dim is
+        # replicated in the cache specs; the model-axis dims line up).
+        self._splice = jax.jit(self.engine._meshed(splice_slot),
+                               donate_argnums=0)
         self._next_id = 0
 
     def submit(self, prompt: np.ndarray,
@@ -207,7 +260,7 @@ class ContinuousBatcher:
         token)`` streams every generated token as it is sampled."""
         b = self.n_slots
         eos = self.scfg.eos_id
-        cache = init_cache(self.cfg, b, self.scfg.max_seq)
+        cache = self.engine.init_cache(b)
         cur = np.zeros(b, np.int32)
         slots: list[Optional[_Slot]] = [None] * b
         emitted: dict[int, list[int]] = {}

@@ -50,7 +50,8 @@ def train(cfg, data_cfg: DataConfig, opt_cfg: AdamWConfig,
           comp_cfg: Optional[CompressionConfig] = None,
           init_params_fn: Optional[Callable] = None,
           state_shardings=None, log_fn: Optional[Callable] = None,
-          max_seq: int = 32768, program_manager=None):
+          max_seq: int = 32768, program_manager=None,
+          mesh=None, shard_policy=None):
     """Run (or resume) training.  Returns (final_state, history).
 
     ``program_manager`` (a :class:`repro.accel.ProgramManager`) is
@@ -59,24 +60,44 @@ def train(cfg, data_cfg: DataConfig, opt_cfg: AdamWConfig,
     the manager lazily rebuilds them from the fresh params.  Training
     itself always runs the on-the-fly STE path — images are never
     installed into the differentiated params.
+
+    ``mesh`` + ``shard_policy`` (an explicit
+    :class:`repro.distributed.ShardPolicy` — never a process global, so
+    a concurrently-live serving engine can hold a different one): when
+    given and ``state_shardings`` is None, state shardings are computed
+    from the policy's rules and the step traces under the mesh.
     """
     from repro.models import init_params
 
     log = log_fn or (lambda s: print(s, flush=True))
     step_fn = build_train_step(cfg, opt_cfg, comp_cfg,
                                trainer_cfg.microbatches)
-    if state_shardings is not None:
-        step_fn = jax.jit(step_fn, in_shardings=(state_shardings, None),
-                          out_shardings=(state_shardings, None),
-                          donate_argnums=0)
-    else:
-        step_fn = jax.jit(step_fn, donate_argnums=0)
+    if mesh is not None:
+        from repro.distributed import autoshard
+
+        inner = step_fn
+
+        def step_fn(state, batch):  # noqa: F811 — meshed trace wrapper
+            with autoshard.use_mesh(mesh, shard_policy):
+                return inner(state, batch)
 
     # ---- init or resume
     latest = ckpt_lib.latest_checkpoint(trainer_cfg.ckpt_dir)
     key = jax.random.PRNGKey(data_cfg.seed)
     params = (init_params_fn or (lambda: init_params(cfg, key, max_seq)))()
     state = init_train_state(params, comp_cfg is not None)
+    if mesh is not None and state_shardings is None:
+        from repro.distributed import sharding as shd
+
+        state_shardings = shd.state_specs(
+            jax.eval_shape(lambda: state), mesh, shard_policy)
+        state = jax.device_put(state, state_shardings)
+    if state_shardings is not None:
+        step_fn = jax.jit(step_fn, in_shardings=(state_shardings, None),
+                          out_shardings=(state_shardings, None),
+                          donate_argnums=0)
+    else:
+        step_fn = jax.jit(step_fn, donate_argnums=0)
     start_step = 0
     if latest is not None:
         state, start_step = ckpt_lib.restore(latest, state, state_shardings)
