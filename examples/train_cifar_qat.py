@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.configs.cifar_nets import NETWORK_A, NETWORK_B
 from repro.core import energy as E
 from repro.data.pipeline import DataConfig, make_batch
-from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
+from repro.models.cnn import cnn_forward, cnn_loss, init_cnn, update_bn_stats
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
 
 
@@ -47,6 +47,9 @@ def main():
         (loss, m), grads = jax.value_and_grad(
             lambda p: cnn_loss(p, batch, net), has_aux=True)(params)
         params, opt, om = apply_updates(params, grads, opt, opt_cfg)
+        # maintain the running BN statistics the inference datapath
+        # registers are folded from (outside the gradient)
+        params = update_bn_stats(params, m.pop("bn_stats"))
         return params, opt, {**m, **om}
 
     print(f"training {net.name} ({'full' if args.full else 'reduced'}) "
@@ -63,6 +66,8 @@ def main():
     eval_batches = [make_batch(data_cfg, 10_000 + i) for i in range(5)]
 
     def accuracy(backend):
+        # inference mode: running BN stats folded into the fused datapath
+        # epilogue — logits are batch-composition independent
         accs = []
         for b in eval_batches:
             logits = cnn_forward(params, b["images"], net, backend=backend)

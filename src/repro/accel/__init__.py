@@ -51,6 +51,8 @@ Quick start::
     with accel.override(backend="digital_int"):   # eval-parity run
         logits, _ = forward(params, tokens, cfg)
 """
+from repro.core.datapath import Postreduce, fold_batchnorm
+
 from .context import (ExecContext, MvmRecord, adc_noise, energy_summary,
                       override, trace, vmapped)
 from .dispatch import matmul
@@ -64,6 +66,7 @@ from . import backends as _backends  # noqa: F401  (registers built-ins)
 
 __all__ = [
     "ExecSpec", "PrecisionPolicy", "DIGITAL", "ExecContext", "MvmRecord",
+    "Postreduce", "fold_batchnorm",
     "matmul", "override", "trace", "vmapped", "adc_noise", "energy_summary",
     "register_backend", "get_backend", "list_backends",
     "CimaImage", "CimaProgram", "ProgramManager", "build_program",

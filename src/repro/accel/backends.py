@@ -96,11 +96,23 @@ def rescale(y_int: jax.Array, x_scale: jax.Array, w_scale: jax.Array,
     return y_int * x_scale * sw
 
 
+def apply_post(y: jax.Array, post, spec: ExecSpec) -> jax.Array:
+    """Run a fused :class:`~repro.core.datapath.Postreduce` epilogue on a
+    backend's rescaled output (scale -> bias -> activation -> B_y
+    saturation, paper Fig. 8).  No-op when ``post`` is None — every
+    quantizing backend ends with this so the fused path is the SAME
+    function composition as matmul-then-postreduce (bit-for-bit parity
+    by construction)."""
+    if post is None:
+        return y
+    return post.apply(y, spec.bx, spec.ba)
+
+
 @register_backend("digital")
 def digital(x: jax.Array, w: jax.Array, spec: ExecSpec,
             ctx: ExecContext) -> jax.Array:
     """Plain float GEMM — the "not in-memory computing" baseline."""
-    return jnp.einsum("...n,nm->...m", x, w)
+    return apply_post(jnp.einsum("...n,nm->...m", x, w), ctx.post, spec)
 
 
 @register_backend("digital_int")
@@ -111,17 +123,22 @@ def digital_int(x: jax.Array, w: jax.Array, spec: ExecSpec,
     qw = weight_grid(w, spec, ctx)
     y_int = jnp.einsum("...n,nm->...m", qx.q.astype(jnp.float32),
                        qw.q.astype(jnp.float32))
-    return rescale(y_int, qx.scale, qw.scale, spec)
+    return apply_post(rescale(y_int, qx.scale, qw.scale, spec),
+                      ctx.post, spec)
 
 
 @register_backend("bpbs")
 def bpbs(x: jax.Array, w: jax.Array, spec: ExecSpec,
          ctx: ExecContext) -> jax.Array:
-    """Mixed-signal BP/BS pipeline, fast GEMM-identity path."""
+    """Mixed-signal BP/BS pipeline, fast GEMM-identity path.  The fused
+    ``ctx.post`` epilogue applies right after plane recombination, inside
+    the same jitted op — XLA fuses it with the barrel-shift einsum, no
+    HBM round-trip between reduce and post-ops."""
     qx = quantize_input(x, spec)
     ws, w_scale = weight_planes_for(w, spec, ctx)
     y_int = bpbs_matmul_planes(qx.q, ws, spec.bpbs(), ctx.key)
-    return rescale(y_int, qx.scale, w_scale, spec)
+    return apply_post(rescale(y_int, qx.scale, w_scale, spec),
+                      ctx.post, spec)
 
 
 @register_backend("bpbs_ref")
@@ -131,24 +148,61 @@ def bpbs_ref(x: jax.Array, w: jax.Array, spec: ExecSpec,
     qx = quantize_input(x, spec)
     ws, w_scale = weight_planes_for(w, spec, ctx)
     y_int = bpbs_matmul_planes_reference(qx.q, ws, spec.bpbs())
-    return rescale(y_int, qx.scale, w_scale, spec)
+    return apply_post(rescale(y_int, qx.scale, w_scale, spec),
+                      ctx.post, spec)
+
+
+def _kernel_fusable(post, m: int) -> bool:
+    """Can this epilogue run inside the Pallas kernel?  The chip's
+    datapath registers are per-COLUMN, so only scalar / per-column
+    scale+bias fuse in-kernel; a tensor-valued bias (e.g. a residual
+    stream on the bias port) applies after the kernel instead — still
+    inside the same jit, so XLA keeps it on-chip."""
+    def per_col(a):
+        return a is None or (a.ndim <= 1 and a.size in (1, m))
+
+    return per_col(post.scale) and per_col(post.bias)
 
 
 @register_backend("pallas")
 def pallas(x: jax.Array, w: jax.Array, spec: ExecSpec,
            ctx: ExecContext) -> jax.Array:
-    """The Pallas TPU kernel (interpret mode on CPU unless overridden)."""
+    """The Pallas TPU kernel (interpret mode on CPU unless overridden).
+    A per-column ``ctx.post`` fuses into the kernel's datapath epilogue:
+    the quantization rescale folds into the scale registers and the
+    output leaves the kernel already post-reduced."""
     from repro.kernels import ops as kernel_ops
 
     qx = quantize_input(x, spec)
     img = ctx.image
     if img is not None:
+        ws_planes, w_scale = img.ws, img.scale
+    else:
+        qw = quantize(w, spec.ba, spec.coding,
+                      axis=1 if spec.per_channel else None)
+        ws_planes, w_scale = None, qw.scale
+
+    post = ctx.post
+    m = int(w.shape[-1])
+    if post is not None and _kernel_fusable(post, m):
+        sw = w_scale.reshape(-1) if spec.per_channel else w_scale
+        escale = qx.scale * sw
+        if post.scale is not None:
+            escale = escale * post.scale
+        fused = dict(escale=escale, pbias=post.bias, act=post.act,
+                     by_bits=post.resolve_bits(spec.bx, spec.ba))
+        if img is not None:
+            return kernel_ops.cima_mvm_from_planes(
+                qx.q, ws_planes, spec.bpbs(), interpret=spec.interpret,
+                **fused)
+        return kernel_ops.cima_mvm(qx.q, qw.q, spec.bpbs(),
+                                   interpret=spec.interpret, **fused)
+
+    if img is not None:
         # the image already stores the kernel's [N, BA, M] int8 layout
-        y_int = kernel_ops.cima_mvm_from_planes(qx.q, img.ws, spec.bpbs(),
+        y_int = kernel_ops.cima_mvm_from_planes(qx.q, ws_planes, spec.bpbs(),
                                                 interpret=spec.interpret)
-        return rescale(y_int, qx.scale, img.scale, spec)
-    qw = quantize(w, spec.ba, spec.coding,
-                  axis=1 if spec.per_channel else None)
-    y_int = kernel_ops.cima_mvm(qx.q, qw.q, spec.bpbs(),
-                                interpret=spec.interpret)
-    return rescale(y_int, qx.scale, qw.scale, spec)
+    else:
+        y_int = kernel_ops.cima_mvm(qx.q, qw.q, spec.bpbs(),
+                                    interpret=spec.interpret)
+    return apply_post(rescale(y_int, qx.scale, w_scale, spec), post, spec)

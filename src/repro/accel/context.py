@@ -33,6 +33,11 @@ class ExecContext:
     # when armed, the backend consumes precompiled bit planes instead of
     # quantizing the weight operand — the weight-stationary serving path
     image: Optional[object] = None      # CimaImage | None
+    # fused near-memory datapath epilogue (repro.core.datapath): when
+    # armed, the backend applies scale/bias/activation/B_y-saturation on
+    # the recombined output before returning — the chip's post-reduce
+    # pipeline, with no HBM round-trip between reduce and post-ops
+    post: Optional[object] = None       # core.datapath.Postreduce | None
 
 
 # ------------------------------------------------------------- overrides
@@ -108,6 +113,10 @@ class MvmRecord:
     # per-device wall cycles (local tile) and system energy (x devices).
     devices: int = 1        # mesh "model"-axis shards executing this MVM
     partition: str = ""     # "col" | "row" | "" (unsharded)
+    # fused near-memory datapath: post-reduce ops per output element
+    # (scale / bias / activation / saturate each count 1) — what
+    # energy_summary charges as datapath post-op energy
+    post_ops: int = 0
 
 
 _TRACE_STACK: list[list] = []
@@ -211,6 +220,12 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
       cycles (shards run in parallel, so per-device cycles are the
       latency proxy), including the per-device reload cycles of
       streamed images.
+
+    Fused datapath epilogues (``post_ops > 0``) charge the near-memory
+    post-reduce pipeline: one ``datapath_out`` pJ per op per LOGICAL
+    output element (the datapath runs the pipeline once per output,
+    wherever its shard lands) — surfaced as ``post_pj`` in the totals
+    and per tag.
     """
     from repro.core import energy as E
     from .program import segment_cycles, segment_dma_words
@@ -221,16 +236,19 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     seg_words = segment_dma_words()
     e_dma = E.ENERGY_PJ[vdd]["dma_32b"]
 
+    e_post = E.ENERGY_PJ[vdd]["datapath_out"]
+
     by_tag: dict[str, dict] = {}
     total_pj = 0.0
     total_cycles = 0
     load_pj = 0.0
     load_cycles = 0
+    post_pj = 0.0
     for r in records:
         row = by_tag.setdefault(
             r.tag or r.backend,
             {"backend": r.backend, "mvms": 0, "pj": 0.0, "cycles": 0,
-             "load_cycles": 0})
+             "load_cycles": 0, "post_pj": 0.0})
         row["mvms"] += r.calls
         if r.backend == "digital":
             continue
@@ -250,10 +268,15 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
             load_pj += lp
             pj += lp
             cyc += lc
+        if getattr(r, "post_ops", 0):
+            pp = r.post_ops * r.m * r.calls * e_post
+            row["post_pj"] += pp
+            post_pj += pp
+            pj += pp
         row["pj"] += pj
         row["cycles"] += cyc
         total_pj += pj
         total_cycles += cyc
     return {"total_pj": total_pj, "total_cycles": total_cycles,
             "load_pj": load_pj, "load_cycles": load_cycles,
-            "by_tag": by_tag}
+            "post_pj": post_pj, "by_tag": by_tag}

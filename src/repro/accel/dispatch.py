@@ -36,7 +36,7 @@ from .spec import ExecSpec
 
 
 def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
-                image=None) -> None:
+                image=None, post=None) -> None:
     if not tracing():
         return
     streamed = image is not None and not image.resident
@@ -56,6 +56,7 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
         load_segments=image.segments if streamed else 0,
         devices=image.devices if image is not None else 1,
         partition=(image.partition or "") if image is not None else "",
+        post_ops=post.n_ops() if post is not None else 0,
     ))
 
 
@@ -87,6 +88,7 @@ def matmul(
     *,
     dtype=None,
     image=None,
+    post=None,
 ) -> jax.Array:
     """``x @ w`` under ``spec``'s execution backend.
 
@@ -102,10 +104,21 @@ def matmul(
       resolved spec, the backend consumes its bit planes instead of
       quantizing ``w`` — bit-for-bit the same result, zero weight
       quantize/decompose ops, and the same STE gradients.
+    * ``post`` (optional): a :class:`~repro.core.datapath.Postreduce`
+      epilogue (scale -> bias -> activation -> B_y saturation, paper
+      Fig. 8) executed FUSED at the accelerator: inside the Pallas
+      kernel's datapath stage, after plane recombination in the fast
+      bpbs path, and after the row-parallel psum under shard_map.  The
+      result is bit-for-bit ``post.apply(matmul(x, w, spec))`` — the
+      backends end with the identical function composition — and the
+      gradients are exactly the unfused composition's: STE through the
+      quantized matmul, the true VJP through the epilogue (including
+      cotangents for ``post.scale``/``post.bias``).
     """
     if spec is None:
         dt = dtype or x.dtype
-        return jnp.einsum("...n,nm->...m", x.astype(dt), w.astype(dt))
+        y = jnp.einsum("...n,nm->...m", x.astype(dt), w.astype(dt))
+        return post.apply(y) if post is not None else y
 
     ov = current_override()
     if ov:
@@ -116,7 +129,7 @@ def matmul(
     if image is not None and not image_matches(image, spec, w):
         image = None
     mesh = _shard_mesh(image)
-    _record_mvm(spec, x, w, image)
+    _record_mvm(spec, x, w, image, post)
 
     if mesh is not None:
         # mesh-partitioned program path: the backend runs under shard_map,
@@ -127,7 +140,7 @@ def matmul(
 
         def fn(x_, w_, spec_, ctx_):
             return sharded_program_matmul(x_, spec_, img, mesh,
-                                          key=ctx_.key)
+                                          key=ctx_.key, post=ctx_.post)
     else:
         fn = get_backend(spec.backend)
     if ctx is None:
@@ -137,24 +150,57 @@ def matmul(
     if spec.is_digital:
         # digital computes at the caller's dtype and takes no STE wrapper,
         # but still goes through the registry so a re-registered "digital"
-        # backend governs this path too
+        # backend governs this path too (the epilogue applies inside the
+        # backend, differentiably — digital needs no STE)
         dt = dtype or x.dtype
+        if post is not None:
+            ctx = dataclasses.replace(ctx, post=post)
         return fn(x.astype(dt), w.astype(dt), spec, ctx)
     xf = x.astype(jnp.float32)
     wf = w.astype(jnp.float32)
 
-    @jax.custom_vjp
-    def _op(x, w):
-        return fn(x, w, spec, ctx)
+    if post is None:
+        @jax.custom_vjp
+        def _op(x, w):
+            return fn(x, w, spec, ctx)
 
-    def _fwd(x, w):
-        return _op(x, w), (x, w)
+        def _fwd(x, w):
+            return _op(x, w), (x, w)
+
+        def _bwd(res, g):
+            x, w = res
+            dx = jnp.einsum("...m,nm->...n", g, w)
+            dw = jnp.einsum("...n,...m->nm", x, g)
+            return dx, dw
+
+        _op.defvjp(_fwd, _bwd)
+        return _op(xf, wf)
+
+    # fused-epilogue path: the primal runs the backend WITH ctx.post (the
+    # kernel-fused forward); differentiation runs matmul-then-epilogue —
+    # the same values (the backends compose identically) with the
+    # pre-epilogue output saved as the residual the epilogue VJP needs.
+    pargs = post.dyn_args()
+
+    def _epi(y_pre, *pa):
+        return post.with_dyn_args(pa).apply(y_pre, spec.bx, spec.ba)
+
+    @jax.custom_vjp
+    def _opf(x, w, *pa):
+        return fn(x, w, spec,
+                  dataclasses.replace(ctx, post=post.with_dyn_args(pa)))
+
+    def _fwd(x, w, *pa):
+        y_pre = fn(x, w, spec, ctx)
+        return _epi(y_pre, *pa), (x, w, y_pre, pa)
 
     def _bwd(res, g):
-        x, w = res
-        dx = jnp.einsum("...m,nm->...n", g, w)
-        dw = jnp.einsum("...n,...m->nm", x, g)
-        return dx, dw
+        x, w, y_pre, pa = res
+        _, pvjp = jax.vjp(_epi, y_pre, *pa)
+        gy, *gpa = pvjp(g)
+        dx = jnp.einsum("...m,nm->...n", gy, w)
+        dw = jnp.einsum("...n,...m->nm", x, gy)
+        return (dx, dw, *gpa)
 
-    _op.defvjp(_fwd, _bwd)
-    return _op(xf, wf)
+    _opf.defvjp(_fwd, _bwd)
+    return _opf(xf, wf, *pargs)

@@ -69,13 +69,32 @@ def _wq_spec(partition: str) -> P:
     return P("model", None) if partition == "row" else P(None, "model")
 
 
+def _post_spec(arr, part: str, m: int) -> P:
+    """Placement of one epilogue operand: arrays whose last dim is the
+    output dim split with the columns under "col"; everything else
+    (scalars, per-tensor scales, row-parallel operands applied after the
+    psum) is replicated."""
+    if part == "col" and arr.ndim and arr.shape[-1] == m:
+        return P(*([None] * (arr.ndim - 1) + ["model"]))
+    return P()
+
+
 def sharded_program_matmul(x: jax.Array, spec, image, mesh,
-                           key: Optional[jax.Array] = None) -> jax.Array:
+                           key: Optional[jax.Array] = None,
+                           post=None) -> jax.Array:
     """``x @ w`` from a partitioned compiled image, under ``shard_map``.
 
     ``image.partition`` must be ``"col"`` or ``"row"`` and
     ``mesh.shape["model"] == image.devices`` (the dispatcher checks).
     Returns float32, same contract as the on-the-fly backends.
+
+    ``post`` (a :class:`~repro.core.datapath.Postreduce`) fuses the
+    near-memory datapath epilogue INSIDE the shard_map body — exactly
+    where the chip applies it: column-parallel tiles rescale and
+    post-reduce their own output columns locally (scale/bias registers
+    split with the columns); row-parallel tiles apply scale/bias/act
+    right after the digital partial-sum all-reduce, so the epilogue runs
+    once per output on-device instead of on the gathered result.
     """
     from repro.distributed.autoshard import manual
 
@@ -137,16 +156,38 @@ def sharded_program_matmul(x: jax.Array, spec, image, mesh,
             "mesh-partitioned images support "
             "digital_int / bpbs / bpbs_ref / pallas")
 
+    m = image.m
+    n_local = len(operands)
+    if post is not None:
+        # epilogue operands ride into the body: the quantization scales
+        # plus the datapath registers, placed so "col" tiles hold their
+        # own columns' registers and "row" tiles see the full (post-psum)
+        # vectors replicated
+        epi_ops = (qx.scale, image.scale) + post.dyn_args()
+        epi_specs = tuple(_post_spec(jnp.asarray(a), part, m)
+                          for a in epi_ops)
+        operands = operands + epi_ops
+        w_specs = w_specs + epi_specs
+
     def body(xq, *ops):
-        y = local(xq, *ops)
+        y = local(xq, *ops[:n_local])
         if part == "row":
             y = jax.lax.psum(y, "model")
-        return y
+        if post is None:
+            return y
+        # near-memory datapath, per chip: rescale on the local (or
+        # psum-combined) integer result, then scale -> bias -> act ->
+        # B_y saturation — the output leaves the body post-reduced
+        xsc, wsc, *pa = ops[n_local:]
+        y = rescale(y, xsc, wsc, spec)
+        return post.with_dyn_args(pa).apply(y, spec.bx, spec.ba)
 
     ndim = qx.q.ndim
     with manual():
-        y_int = shard_map(
+        y = shard_map(
             body, mesh=mesh, in_specs=(_x_spec(ndim, part),) + w_specs,
             out_specs=_out_spec(ndim, part), check_rep=False,
         )(qx.q, *operands)
-    return rescale(y_int, qx.scale, image.scale, spec)
+    if post is None:
+        return rescale(y, qx.scale, image.scale, spec)
+    return y

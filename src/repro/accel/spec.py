@@ -63,6 +63,15 @@ class ExecSpec:
     def is_digital(self) -> bool:
         return self.backend == "digital"
 
+    @property
+    def by_bits(self) -> int:
+        """B_y: the near-memory datapath's saturated output width for this
+        spec's (B_X, B_A) — 16 b when B_X + B_A <= 5, else 32 b (paper
+        Fig. 8).  A ``Postreduce(saturate=True)`` epilogue clips to this."""
+        from repro.core.datapath import output_bits
+
+        return output_bits(self.bx, self.ba)
+
     def bpbs(self) -> BpbsConfig:
         """The core BP/BS config this spec describes."""
         return BpbsConfig(

@@ -90,6 +90,19 @@ class ArchConfig:
     onehot_embed: bool = False       # embedding as one-hot matmul (no gather)
     attn_bf16_probs: bool = False    # bf16 softmax probs into the PV dot
     sp_residual: bool = False        # sequence-parallel residual stream
+    # near-memory datapath fusion (paper Figs. 5/8; DESIGN.md §10): MLP /
+    # gate activations and the MLP residual ride accel.matmul(post=) as a
+    # fused Postreduce epilogue instead of separate post-matmul ops.
+    # False = the unfused baseline (kept for the BENCH_fused comparison).
+    # Numerics: on quantized backends the epilogue runs on the f32
+    # recombined output BEFORE the cast to the activation dtype — the
+    # chip's own order (the datapath precedes the DMA) — so bfloat16
+    # configs diverge from the unfused act(cast(y)) ordering by per-layer
+    # rounding that compounds through the residual stream (float32
+    # configs are bit-identical; bf16 fused is no worse an approximation
+    # of the f32 model than bf16 unfused — pinned by
+    # test_model_fused_no_worse_than_unfused_under_bf16).
+    fuse_datapath: bool = True
 
     @property
     def hd(self) -> int:

@@ -13,7 +13,8 @@ Modules mirror the chip's block diagram (paper Figs. 1, 2):
 * :mod:`repro.core.sparsity` — Sparsity/AND-logic Controller (element
   masks, adaptive ADC range).
 * :mod:`repro.core.datapath` — near-memory digital post-reduce pipeline
-  (barrel shift, scale/bias, output-width selection).
+  (scale -> bias -> activation -> B_y saturation; :class:`Postreduce`
+  is the fused-epilogue form ``accel.matmul(post=)`` executes).
 * :mod:`repro.core.energy`   — measured pJ/cycle/bandwidth cost model
   (Summary table, Figs. 8/11 reproductions).
 * :mod:`repro.core.sqnr`     — Fig. 7 SQNR analysis.

@@ -1,13 +1,28 @@
-"""Near-memory digital datapath: post-reduce compute (paper Fig. 5).
+"""Near-memory digital datapath: post-reduce compute (paper Figs. 5, 8).
 
 After BP/BS recombination (the barrel shift + accumulate in
 :mod:`repro.core.bpbs`), the 8:1 column-multiplexed datapath applies the
-configurable post-reduce pipeline: global/local scaling and biasing,
-batch normalization, activation function, and saturation of the output to
-B_y bits (16 b when ``B_X + B_A <= 5``, else 32 b — paper Fig. 8).
+configurable post-reduce pipeline — in the chip's order (Fig. 8):
+
+1. global/local **scaling** (the datapath's per-column scale registers;
+   batch-norm folds its ``gamma / sqrt(var)`` here),
+2. **biasing** (per-column bias registers; BN's ``beta - mean*inv``),
+3. **activation** (ReLU/sign comparator/etc.),
+4. **saturation** of the output to B_y bits (16 b when ``B_X + B_A <= 5``,
+   else 32 b — Fig. 8's output-word rule).
+
+Saturation is the LAST stage: the chip bounds the value it writes out
+over the DMA, not the raw recombined sum entering the pipeline.
+
+:class:`Postreduce` is the declarative form of one datapath program —
+the ``post=`` argument of :func:`repro.accel.matmul` threads it into
+every execution backend so the whole pipeline runs fused at the
+accelerator (no HBM round-trip between the reduce and the post-ops),
+exactly as the chip computes "diverse computations locally".
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Optional
 
 import jax
@@ -40,16 +55,89 @@ def postreduce(
     act: Optional[str] = None,
     by_bits: Optional[int] = None,
 ) -> jax.Array:
-    """The datapath's post-reduce pipeline on recombined outputs."""
-    if by_bits is not None:
-        y = saturate(y, by_bits)
+    """The datapath's post-reduce pipeline on recombined outputs.
+
+    Order is the chip's (Fig. 8): scale -> bias -> activation ->
+    saturate-to-B_y.  Saturation bounds the OUTPUT word the datapath
+    writes, so it runs last — saturating first would clip the raw
+    recombined sum before the scale/bias registers ever see it.
+    """
     if scale is not None:
         y = y * scale
     if bias is not None:
         y = y + bias
     if act is not None:
         y = ACTIVATIONS[act](y)
+    if by_bits is not None:
+        y = saturate(y, by_bits)
     return y
+
+
+@dataclasses.dataclass
+class Postreduce:
+    """One datapath program: the fused epilogue of a CIMU matmul.
+
+    ``scale``/``bias`` are the datapath's scale/bias register contents
+    (scalar, per-column ``[M]``, or any shape broadcastable to the
+    output — a residual stream rides the bias port).  ``act`` names an
+    entry of :data:`ACTIVATIONS`.  ``saturate`` clips the output to B_y
+    bits per :func:`output_bits` of the executing spec's (B_X, B_A);
+    ``by_bits`` overrides that width explicitly.
+
+    Registered as a pytree (arrays are data, the program shape is
+    metadata) so it crosses ``jit``/``vmap`` boundaries like any other
+    operand bundle.
+    """
+
+    scale: Optional[jax.Array] = None
+    bias: Optional[jax.Array] = None
+    act: Optional[str] = None
+    saturate: bool = False
+    by_bits: Optional[int] = None
+
+    def resolve_bits(self, bx: Optional[int] = None,
+                     ba: Optional[int] = None) -> Optional[int]:
+        """The saturation width in effect (None = no saturation)."""
+        if self.by_bits is not None:
+            return self.by_bits
+        if self.saturate and bx is not None and ba is not None:
+            return output_bits(bx, ba)
+        return None
+
+    def n_ops(self) -> int:
+        """Datapath ops per output element (the energy-trace count)."""
+        return ((self.scale is not None) + (self.bias is not None)
+                + (self.act not in (None, "identity"))
+                + (self.saturate or self.by_bits is not None))
+
+    def apply(self, y: jax.Array, bx: Optional[int] = None,
+              ba: Optional[int] = None) -> jax.Array:
+        """Run the pipeline on ``y`` (the unfused reference semantics)."""
+        return postreduce(y, self.scale, self.bias, self.act,
+                          self.resolve_bits(bx, ba))
+
+    # The dynamic (array) operands, as a flat tuple — what the fused
+    # dispatch threads through its custom_vjp as explicit differentiable
+    # inputs (and the shard_map body as explicit operands).  One
+    # definition keeps the two call sites in lockstep with the field set.
+    def dyn_args(self) -> tuple:
+        return tuple(a for a in (self.scale, self.bias) if a is not None)
+
+    def with_dyn_args(self, pa) -> "Postreduce":
+        """Rebuild this program with its arrays replaced by ``pa`` (the
+        same order :meth:`dyn_args` emits)."""
+        it = iter(pa)
+        return dataclasses.replace(
+            self,
+            scale=next(it) if self.scale is not None else None,
+            bias=next(it) if self.bias is not None else None)
+
+
+jax.tree_util.register_dataclass(
+    Postreduce,
+    data_fields=["scale", "bias"],
+    meta_fields=["act", "saturate", "by_bits"],
+)
 
 
 def fold_batchnorm(

@@ -27,6 +27,7 @@ accumulation of <=2304 unit products is exact).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,12 +43,16 @@ def _kernel(
     ws_ref,     # [bank_n, BA, bm] int8: weight bit planes (bit-parallel)
     nu_ref,     # [bb, 1] f32: unmasked-row count for this bank
     fs_ref,     # [1, 1]  f32: ADC full scale for this bank (static gating)
-    out_ref,    # [bb, bm] f32: recombined integer-grid output
-    *,
+    *rest,      # fused epilogue: es_ref, pb_ref [1, bm] f32 — then out_ref
     cfg: BpbsConfig,
     wx: tuple,
     wa: tuple,
+    n_banks: int = 0,
+    act: str = "",
+    by_bits: int = 0,
 ):
+    out_ref = rest[-1]  # [bb, bm] f32: recombined output
+    fused = len(rest) > 1
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -75,6 +80,25 @@ def _kernel(
             acc = acc + (wx[kx] * wa[ka]) * d_hat
     out_ref[...] += acc
 
+    if fused:
+        es_ref, pb_ref = rest[0], rest[1]
+
+        # near-memory datapath post-reduce (paper Fig. 8), fused after the
+        # LAST bank accumulates: combined rescale+scale registers -> bias
+        # registers -> activation -> B_y output saturation, all before the
+        # result ever leaves the kernel (no HBM round-trip).
+        @pl.when(k == n_banks - 1)
+        def _postreduce():
+            y = out_ref[...] * es_ref[...] + pb_ref[...]
+            if act:
+                from repro.core.datapath import ACTIVATIONS
+
+                y = ACTIVATIONS[act](y)
+            if by_bits:
+                hi = 2.0 ** (by_bits - 1) - 1
+                y = jnp.clip(y, -(hi + 1), hi)
+            out_ref[...] = y
+
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
     size = x.shape[axis]
@@ -88,7 +112,8 @@ def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "block_b", "block_m", "interpret"),
+    static_argnames=("cfg", "block_b", "block_m", "interpret", "act",
+                     "by_bits"),
 )
 def cima_mvm_planes(
     xs: jax.Array,          # [B, BX, N] int8 masked input planes
@@ -99,8 +124,22 @@ def cima_mvm_planes(
     block_b: int = 128,
     block_m: int = 128,
     interpret: bool = True,
+    escale: Optional[jax.Array] = None,   # [M]|scalar: rescale*post-scale
+    pbias: Optional[jax.Array] = None,    # [M]|scalar: datapath bias regs
+    act: Optional[str] = None,
+    by_bits: Optional[int] = None,
 ) -> jax.Array:
-    """Raw kernel entry on pre-decomposed planes.  Returns [B, M] f32."""
+    """Raw kernel entry on pre-decomposed planes.  Returns [B, M] f32.
+
+    ``escale``/``pbias``/``act``/``by_bits`` arm the fused near-memory
+    datapath epilogue (paper Fig. 8): after the last bank accumulates,
+    the kernel applies ``y*escale + pbias``, the activation, and the B_y
+    saturation in-VMEM — the output leaves the kernel already
+    post-reduced.  ``escale`` combines the quantization rescale
+    (``x_scale * w_scale``) with the datapath scale registers; without
+    the epilogue the kernel returns the recombined integer-grid output
+    as before.
+    """
     b, bx, n = xs.shape
     n_w, ba, m = ws.shape
     assert n_w == n and bx == cfg.bx and ba == cfg.ba
@@ -111,6 +150,25 @@ def cima_mvm_planes(
     nu = _pad_to(nu, 0, block_b)
     bp, mp = xs.shape[0], ws.shape[2]
 
+    fused = (escale is not None or pbias is not None
+             or bool(act) or bool(by_bits))
+    operands = [xs, ws, nu, fs.reshape(1, -1)]
+    in_specs = [
+        pl.BlockSpec((block_b, cfg.bx, cfg.bank_n), lambda i, j, k: (i, 0, k)),
+        pl.BlockSpec((cfg.bank_n, cfg.ba, block_m), lambda i, j, k: (k, 0, j)),
+        pl.BlockSpec((block_b, 1), lambda i, j, k: (i, k)),
+        pl.BlockSpec((1, 1), lambda i, j, k: (0, k)),
+    ]
+    if fused:
+        def col_vec(v, fill):
+            v = jnp.full((m,), fill, jnp.float32) if v is None else \
+                jnp.broadcast_to(jnp.asarray(v, jnp.float32).reshape(-1),
+                                 (m,))
+            return _pad_to(v.reshape(1, m), 1, block_m)
+
+        operands += [col_vec(escale, 1.0), col_vec(pbias, 0.0)]
+        in_specs += [pl.BlockSpec((1, block_m), lambda i, j, k: (0, j))] * 2
+
     grid = (bp // block_b, mp // block_m, n_banks)
     out = pl.pallas_call(
         functools.partial(
@@ -118,14 +176,12 @@ def cima_mvm_planes(
             cfg=cfg,
             wx=tuple(float(v) for v in cfg.wx),
             wa=tuple(float(v) for v in cfg.wa),
+            n_banks=n_banks,
+            act=(act or "") if fused else "",
+            by_bits=(by_bits or 0) if fused else 0,
         ),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_b, cfg.bx, cfg.bank_n), lambda i, j, k: (i, 0, k)),
-            pl.BlockSpec((cfg.bank_n, cfg.ba, block_m), lambda i, j, k: (k, 0, j)),
-            pl.BlockSpec((block_b, 1), lambda i, j, k: (i, k)),
-            pl.BlockSpec((1, 1), lambda i, j, k: (0, k)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_b, block_m), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, mp), jnp.float32),
         compiler_params=_compat.CompilerParams(
@@ -133,7 +189,7 @@ def cima_mvm_planes(
         ),
         interpret=interpret,
         name="cima_bpbs_mvm",
-    )(xs, ws, nu, fs.reshape(1, -1))
+    )(*operands)
     return out[:b, :m]
 
 
@@ -184,11 +240,18 @@ def cima_mvm(
     block_b: int = 128,
     block_m: int = 128,
     interpret: bool = True,
+    escale: Optional[jax.Array] = None,
+    pbias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    by_bits: Optional[int] = None,
 ) -> jax.Array:
-    """BP/BS MVM on integer-grid operands: [..., N] x [N, M] -> [..., M]."""
+    """BP/BS MVM on integer-grid operands: [..., N] x [N, M] -> [..., M].
+    ``escale``/``pbias``/``act``/``by_bits`` arm the fused datapath
+    epilogue (see :func:`cima_mvm_planes`)."""
     xs, nu, lead = prepare_inputs(x_q, cfg)
     ws, fs = prepare_weights(w_q, cfg)
-    y = cima_mvm_planes(xs, ws, nu, fs, cfg, block_b, block_m, interpret)
+    y = cima_mvm_planes(xs, ws, nu, fs, cfg, block_b, block_m, interpret,
+                        escale, pbias, act, by_bits)
     return y.reshape(*lead, w_q.shape[1])
 
 
@@ -199,11 +262,16 @@ def cima_mvm_from_planes(
     block_b: int = 128,
     block_m: int = 128,
     interpret: bool = True,
+    escale: Optional[jax.Array] = None,
+    pbias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    by_bits: Optional[int] = None,
 ) -> jax.Array:
     """BP/BS MVM consuming a pre-compiled weight image: the weight-
     stationary serving path.  Only the (dynamic) inputs are decomposed
     per call; the planes come straight from the loaded program."""
     xs, nu, lead = prepare_inputs(x_q, cfg)
     fs = bank_full_scales(ws.shape[0], cfg)
-    y = cima_mvm_planes(xs, ws, nu, fs, cfg, block_b, block_m, interpret)
+    y = cima_mvm_planes(xs, ws, nu, fs, cfg, block_b, block_m, interpret,
+                        escale, pbias, act, by_bits)
     return y.reshape(*lead, ws.shape[2])

@@ -27,11 +27,18 @@ def cima_mvm(
     block_b: int = 128,
     block_m: int = 128,
     interpret: Optional[bool] = None,
+    escale: Optional[jax.Array] = None,
+    pbias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    by_bits: Optional[int] = None,
 ) -> jax.Array:
-    """BP/BS mixed-signal MVM kernel: [..., N] x [N, M] -> [..., M] (f32)."""
+    """BP/BS mixed-signal MVM kernel: [..., N] x [N, M] -> [..., M] (f32).
+    ``escale``/``pbias``/``act``/``by_bits`` arm the fused near-memory
+    datapath epilogue inside the kernel."""
     if interpret is None:
         interpret = not on_tpu()
-    return _cima.cima_mvm(x_q, w_q, cfg, block_b, block_m, interpret)
+    return _cima.cima_mvm(x_q, w_q, cfg, block_b, block_m, interpret,
+                          escale, pbias, act, by_bits)
 
 
 def cima_mvm_from_planes(
@@ -41,13 +48,17 @@ def cima_mvm_from_planes(
     block_b: int = 128,
     block_m: int = 128,
     interpret: Optional[bool] = None,
+    escale: Optional[jax.Array] = None,
+    pbias: Optional[jax.Array] = None,
+    act: Optional[str] = None,
+    by_bits: Optional[int] = None,
 ) -> jax.Array:
     """Weight-stationary kernel entry: ``ws`` [N, BA, M] int8 bit planes
     from a compiled CIMA image; [..., N] inputs -> [..., M] (f32)."""
     if interpret is None:
         interpret = not on_tpu()
     return _cima.cima_mvm_from_planes(x_q, ws, cfg, block_b, block_m,
-                                      interpret)
+                                      interpret, escale, pbias, act, by_bits)
 
 
 def flash_attention(

@@ -11,12 +11,13 @@ activation dtype, quantized backends compute f32 with STE gradients.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.accel import ExecSpec, matmul as accel_matmul
+from repro.accel import ExecSpec, Postreduce, matmul as accel_matmul
 
 
 def truncated_normal_init(key, shape, stddev):
@@ -34,15 +35,27 @@ def init_linear(key, d_in: int, d_out: int, bias: bool = False,
 
 
 def linear(params: dict, x: jax.Array, spec: Optional[ExecSpec] = None,
-           dtype=jnp.bfloat16) -> jax.Array:
+           dtype=jnp.bfloat16,
+           post: Optional[Postreduce] = None) -> jax.Array:
     """x @ w (+ b), through the configured execution backend.
 
     If a compiled weight image was installed next to the weight (key
     ``"cima"``, see :func:`repro.accel.install_program`), it rides into
-    dispatch — the weight-stationary serving path."""
+    dispatch — the weight-stationary serving path.
+
+    ``post`` fuses the near-memory datapath epilogue into the matmul
+    (DESIGN.md §10).  A linear bias ``b`` folds into the datapath's bias
+    registers pre-scale (``(y + b)*s + pb == y*s + (b*s + pb)``), so the
+    fused projection still computes ``post((x @ w) + b)``."""
+    if post is not None and "b" in params:
+        b = params["b"]
+        pb = b if post.scale is None else b * post.scale
+        if post.bias is not None:
+            pb = pb + post.bias
+        post = dataclasses.replace(post, bias=pb)
     y = accel_matmul(x, params["w"], spec, dtype=dtype,
-                     image=params.get("cima")).astype(dtype)
-    if "b" in params:
+                     image=params.get("cima"), post=post).astype(dtype)
+    if "b" in params and post is None:
         y = y + params["b"].astype(y.dtype)
     return y
 
@@ -131,12 +144,28 @@ def init_mlp(key, cfg) -> dict:
     return {"up": init_linear(k1, d, f), "down": init_linear(k2, f, d)}
 
 
-def mlp(params: dict, x: jax.Array, cfg, dtype=jnp.bfloat16) -> jax.Array:
+def mlp(params: dict, x: jax.Array, cfg, dtype=jnp.bfloat16,
+        residual: Optional[jax.Array] = None) -> jax.Array:
+    """MLP block.  With ``cfg.fuse_datapath`` (default) the nonlinearity
+    rides the gate/up projection as a fused ``Postreduce(act=...)``
+    epilogue, and a ``residual`` stream rides the down projection's
+    datapath bias port — the paper's "diverse computations locally",
+    removing the separate activation / residual passes after each
+    matmul.  Returns ``residual + mlp(x)`` when ``residual`` is given."""
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
     sp = cfg.policy.resolver("mlp")
+    fuse = getattr(cfg, "fuse_datapath", True)
+    act_post = Postreduce(act=cfg.act) if fuse else None
     if "gate" in params:
-        h = act(linear(params["gate"], x, sp("mlp.gate"), dtype)) * \
-            linear(params["up"], x, sp("mlp.up"), dtype)
+        g = linear(params["gate"], x, sp("mlp.gate"), dtype, post=act_post)
+        h = (g if fuse else act(g)) * linear(params["up"], x, sp("mlp.up"),
+                                             dtype)
     else:
-        h = act(linear(params["up"], x, sp("mlp.up"), dtype))
-    return linear(params["down"], h, sp("mlp.down"), dtype)
+        u = linear(params["up"], x, sp("mlp.up"), dtype, post=act_post)
+        h = u if fuse else act(u)
+    res_post = (Postreduce(bias=residual)
+                if fuse and residual is not None else None)
+    y = linear(params["down"], h, sp("mlp.down"), dtype, post=res_post)
+    if residual is not None and res_post is None:
+        y = residual + y
+    return y

@@ -86,16 +86,21 @@ def moe_ffn(params, x, cfg, dtype=jnp.bfloat16):
     # FFN weights are stationary MVM matrices -> accelerator-eligible;
     # vmap over experts keeps each expert's quantization scales private.
     act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
-    from repro.accel import matmul as accel_matmul
+    from repro.accel import Postreduce, matmul as accel_matmul
 
     sp = cfg.policy.resolver("moe")
     sp_g, sp_u, sp_d = sp("moe.gate"), sp("moe.up"), sp("moe.down")
+    # near-memory datapath fusion: the gate nonlinearity runs as the gate
+    # projection's fused epilogue (DESIGN.md §10)
+    fuse = getattr(cfg, "fuse_datapath", True)
+    gate_post = Postreduce(act=cfg.act) if fuse else None
 
     def expert(xe_e, wg, wu, wd, ig=None, iu=None, idn=None):
-        ge = accel_matmul(xe_e, wg, sp_g, dtype=dtype, image=ig)
+        ge = accel_matmul(xe_e, wg, sp_g, dtype=dtype, image=ig,
+                          post=gate_post)
         ue = accel_matmul(xe_e, wu, sp_u, dtype=dtype, image=iu)
-        return accel_matmul(act(ge) * ue, wd, sp_d, dtype=dtype,
-                            image=idn).astype(dtype)
+        return accel_matmul((ge if fuse else act(ge)) * ue, wd, sp_d,
+                            dtype=dtype, image=idn).astype(dtype)
 
     # the vmapped expert axis is invisible to the dispatcher's shape-based
     # call counting; scale the energy-trace records by e
@@ -125,7 +130,9 @@ def moe_ffn(params, x, cfg, dtype=jnp.bfloat16):
 
     if "shared" in params:
         shp = params["shared"]
-        h = act(linear(shp["gate"], xt, sp("moe.shared.gate"), dtype)) * \
+        sg = linear(shp["gate"], xt, sp("moe.shared.gate"), dtype,
+                    post=gate_post)
+        h = (sg if fuse else act(sg)) * \
             linear(shp["up"], xt, sp("moe.shared.up"), dtype)
         y = y + linear(shp["down"], h, sp("moe.shared.down"), dtype)
 

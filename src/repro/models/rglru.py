@@ -69,7 +69,15 @@ def rglru_forward(params, x, cfg, state: Optional[LRUState] = None,
 
     b, s, d = x.shape
     sp = cfg.policy.resolver("rec")
-    gate = jax.nn.gelu(linear(params["in_gate"], x, sp("rec.in_gate"), dtype))
+    # the gate GELU rides the in_gate projection's fused datapath epilogue
+    if getattr(cfg, "fuse_datapath", True):
+        from repro.accel import Postreduce
+
+        gate = linear(params["in_gate"], x, sp("rec.in_gate"), dtype,
+                      post=Postreduce(act="gelu"))
+    else:
+        gate = jax.nn.gelu(linear(params["in_gate"], x, sp("rec.in_gate"),
+                                  dtype))
     xr = cs(linear(params["in_x"], x, sp("rec.in_x"), dtype),
             ("dp", None, "tp"))
     if pad_mask is not None:

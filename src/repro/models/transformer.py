@@ -82,9 +82,13 @@ def apply_block(params: dict, x, cfg, kind: str, positions, cache=None,
     h2 = norm(params["ln2"], x, cfg.norm)
     if kind == "moe":
         ff, aux = moe_mod.moe_ffn(params["moe"], h2, cfg, dtype)
-    else:
-        ff, aux = mlp(params["mlp"], h2, cfg, dtype), jnp.zeros((), jnp.float32)
-    return x + ff, new_cache, aux
+        return x + ff, new_cache, aux
+    # dense MLP: the residual stream rides the down projection's fused
+    # datapath epilogue (bias port) instead of a separate add after the
+    # matmul returns — no HBM round-trip on the decode hot path
+    # (repro.models.layers.mlp; disabled by cfg.fuse_datapath=False)
+    x = mlp(params["mlp"], h2, cfg, dtype, residual=x)
+    return x, new_cache, jnp.zeros((), jnp.float32)
 
 
 # ------------------------------------------------------------- the stack

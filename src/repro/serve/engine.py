@@ -33,6 +33,12 @@ class ServeConfig:
     max_new_tokens: int = 64
     temperature: float = 0.0          # 0 = greedy
     eos_id: int = -1                  # -1 = never stop early
+    # how often generate() syncs the device-side all-rows-EOS flag to the
+    # host to break out of the decode loop.  Each check is a blocking
+    # device->host read that serializes decode dispatch, so the default
+    # trades up to (eos_check_every - 1) wasted (eos-forced) steps for
+    # 4x fewer pipeline stalls; 1 = check (and stop) at every step.
+    eos_check_every: int = 4
     seed: int = 0
     # weight-stationary CIMA program (repro.accel.program): compile every
     # quantized projection's bit planes ONCE at engine init so decode
@@ -92,6 +98,9 @@ class Engine:
             lambda p, tok, cache: decode_step(p, tok, cache, cfg)),
             donate_argnums=2)
         self._base_key = jax.random.PRNGKey(serve_cfg.seed)
+        # decode steps actually issued by the last generate() call (the
+        # all-rows-EOS early exit makes this < max_new_tokens - 1)
+        self.last_decode_steps = 0
 
     def _meshed(self, fn):
         """Trace ``fn`` under the engine's mesh + shard policy (ambient
@@ -153,20 +162,39 @@ class Engine:
         """
         assert prompts.ndim == 2, "prompts must be a dense [B, S] batch"
         b = prompts.shape[0]
+        eos = self.scfg.eos_id
         rids = np.arange(b) if request_ids is None else np.asarray(request_ids)
         logits, cache = self._prefill(self.params, prompts, frontend_embeds)
         tok = self.sample(logits, rids, np.zeros(b, np.int64))
         out = [tok]
         done = jnp.zeros_like(tok, dtype=bool)
+        self.last_decode_steps = 0
+        check = max(1, self.scfg.eos_check_every)
         for t in range(1, self.scfg.max_new_tokens):
+            if eos >= 0:
+                done = done | (tok == eos)
+                # every row emitted EOS: stop issuing decode steps and pad
+                # the remaining positions with eos_id (exactly what the
+                # full loop would have produced).  The host check blocks
+                # on the in-flight decode, so it runs every
+                # ``eos_check_every`` steps (rows already done keep
+                # emitting forced eos in between — outputs are identical
+                # for any interval).
+                if (t - 1) % check == 0 and bool(np.asarray(done).all()):
+                    break
             logits, cache = self._decode(self.params, tok, cache)
+            self.last_decode_steps += 1
             nxt = self.sample(logits, rids, np.full(b, t))
-            if self.scfg.eos_id >= 0:
-                done = done | (tok == self.scfg.eos_id)
-                nxt = jnp.where(done, self.scfg.eos_id, nxt)
+            if eos >= 0:
+                nxt = jnp.where(done, eos, nxt)
             tok = nxt
             out.append(tok)
-        return np.stack([np.asarray(t) for t in out], axis=1)
+        gen = np.stack([np.asarray(t) for t in out], axis=1)
+        if gen.shape[1] < self.scfg.max_new_tokens:
+            pad = np.full((b, self.scfg.max_new_tokens - gen.shape[1]),
+                          eos, gen.dtype)
+            gen = np.concatenate([gen, pad], axis=1)
+        return gen
 
 
 @dataclasses.dataclass
@@ -334,9 +362,9 @@ class ContinuousBatcher:
                     gen = self.engine.generate(jnp.asarray(toks),
                                                request_ids=rids)
                     self.stats["prefills"] += 1
-                    self.stats["decode_steps"] += self.scfg.max_new_tokens - 1
+                    self.stats["decode_steps"] += self.engine.last_decode_steps
                     self.stats["slot_steps"] += \
-                        len(wave) * (self.scfg.max_new_tokens - 1)
+                        len(wave) * self.engine.last_decode_steps
                     for r, seq in zip(wave, gen):
                         seq = seq.tolist()[: r.budget]
                         if self.scfg.eos_id >= 0 and self.scfg.eos_id in seq:

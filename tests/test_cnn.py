@@ -1,0 +1,98 @@
+"""Fig. 11 CNN correctness: im2col row order, inference BN on running
+statistics through the fused datapath, and training-stat maintenance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import accel
+from repro.configs.cifar_nets import NETWORK_A, NETWORK_B
+from repro.models.cnn import (_im2col, cnn_forward, cnn_loss, init_cnn,
+                              update_bn_stats)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_im2col_is_spatial_major_9xC():
+    """Patch row (kh*k + kw)*C + c must hold channel c at window offset
+    (kh, kw) — the chip's 9*C_in CIMA row order.  (The raw
+    conv_general_dilated_patches output is CHANNEL-major C*k*k; the old
+    code returned that while claiming 9*C.)"""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 5, 5, 3)),
+                    jnp.float32)
+    p = np.asarray(_im2col(x, k=3))
+    assert p.shape == (2, 5, 5, 27)
+    xp = np.pad(np.asarray(x), ((0, 0), (1, 1), (1, 1), (0, 0)))  # SAME
+    for (b, i, j) in [(0, 0, 0), (0, 2, 3), (1, 4, 4)]:
+        win = xp[b, i:i + 3, j:j + 3, :]            # [kh, kw, C]
+        np.testing.assert_array_equal(p[b, i, j], win.reshape(-1))
+
+
+def test_init_cnn_has_running_stats():
+    net = NETWORK_A.reduced()
+    params = init_cnn(KEY, net)
+    for p, layer in zip(params["layers"], net.layers):
+        assert p["bn_mean"].shape == (layer.cout,)
+        assert p["bn_var"].shape == (layer.cout,)
+        np.testing.assert_array_equal(np.asarray(p["bn_var"]), 1.0)
+
+
+def test_eval_logits_batch_independent():
+    """The inference bugfix: a single image's logits are the same alone
+    and inside a batch of different images (running stats folded into the
+    datapath — no live batch statistics).  The old live-stats eval
+    differed at O(1); the residual tolerance here is XLA's batch-shape
+    GEMM tiling, orders of magnitude below the bug."""
+    net = NETWORK_A.reduced()
+    params = init_cnn(KEY, net)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3))
+    # give the running stats a non-trivial value via one training batch
+    _, m = cnn_loss(params, {"images": imgs,
+                             "labels": jnp.asarray([0, 1, 2, 3])}, net)
+    params = update_bn_stats(params, m["bn_stats"])
+
+    alone = cnn_forward(params, imgs[:1], net, backend="digital")
+    batch = cnn_forward(params, imgs, net, backend="digital")
+    np.testing.assert_allclose(np.asarray(alone[0]), np.asarray(batch[0]),
+                               rtol=1e-5, atol=1e-6)
+
+    # and the training path (live batch stats) IS batch dependent — the
+    # behaviour eval used to have, kept only where it belongs
+    alone_t, _ = cnn_forward(params, imgs[:1], net, backend="digital",
+                             train=True)
+    batch_t, _ = cnn_forward(params, imgs, net, backend="digital",
+                             train=True)
+    assert float(jnp.abs(alone_t[0] - batch_t[0]).max()) > 1e-3
+
+
+def test_eval_runs_fused_datapath_train_does_not():
+    net = NETWORK_B.reduced()       # ABN/sign readout path
+    params = init_cnn(KEY, net)
+    imgs = jax.random.normal(KEY, (2, 32, 32, 3))
+    with accel.trace() as recs:
+        cnn_forward(params, imgs, net)
+    assert recs and all(r.post_ops >= 3 for r in recs)  # s, b, (act,) sat
+    with accel.trace() as recs_t:
+        cnn_forward(params, imgs, net, train=True)
+    assert recs_t and all(r.post_ops == 0 for r in recs_t)
+
+
+def test_train_step_updates_running_stats_and_grads_flow():
+    net = NETWORK_A.reduced()
+    params = init_cnn(KEY, net)
+    batch = {"images": jax.random.normal(KEY, (4, 32, 32, 3)),
+             "labels": jnp.asarray([0, 1, 2, 3])}
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: cnn_loss(p, batch, net), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    g0 = grads["layers"][0]
+    assert float(jnp.abs(g0["w"]).max()) > 0
+    assert float(jnp.abs(g0["bn_scale"]).max()) > 0
+    # running stats don't take gradients (stop_gradient'd aux)
+    np.testing.assert_array_equal(np.asarray(g0["bn_mean"]), 0.0)
+    p2 = update_bn_stats(params, m["bn_stats"], momentum=0.5)
+    assert float(jnp.abs(p2["layers"][0]["bn_mean"]
+                         - params["layers"][0]["bn_mean"]).max()) > 0
+    # EMA: new = .5*old + .5*batch
+    mu = m["bn_stats"][0][0]
+    np.testing.assert_allclose(np.asarray(p2["layers"][0]["bn_mean"]),
+                               np.asarray(0.5 * mu), rtol=1e-6)

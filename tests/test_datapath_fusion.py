@@ -1,0 +1,235 @@
+"""Near-memory datapath fusion (paper Figs. 5/8; DESIGN.md §10).
+
+The invariants:
+
+* ``postreduce`` runs the chip's pipeline ORDER: scale -> bias ->
+  activation -> saturate-to-B_y (Fig. 8 saturates the OUTPUT word) —
+  pinned on values that distinguish every ordering.
+* ``accel.matmul(..., post=Postreduce(...))`` is bit-for-bit the unfused
+  ``post.apply(accel.matmul(...))`` on digital / digital_int / bpbs /
+  bpbs_ref (and allclose on the Pallas kernel, whose in-kernel epilogue
+  folds the rescale into one multiply) — on-the-fly AND compiled-image
+  (program) execution.
+* Gradients through the fused epilogue are exactly the unfused
+  composition's: STE through the quantized matmul, true VJP through the
+  epilogue, including cotangents for the scale/bias registers.
+* The trace records datapath post-ops and ``energy_summary`` charges
+  them.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import accel
+from repro.accel.program import _compile_image
+from repro.core.datapath import Postreduce, postreduce
+
+KEY = jax.random.PRNGKey(0)
+rng = np.random.default_rng(0)
+X = jnp.asarray(rng.normal(size=(8, 300)), jnp.float32)
+W = jnp.asarray(rng.normal(size=(300, 48)), jnp.float32)
+SCALE = jnp.asarray(rng.normal(size=(48,)), jnp.float32)
+BIAS = jnp.asarray(rng.normal(size=(48,)), jnp.float32)
+POST = Postreduce(scale=SCALE, bias=BIAS, act="relu", saturate=True)
+
+
+# --------------------------------------------------------- pipeline order
+
+def test_postreduce_order_scale_bias_act_saturate():
+    """Values chosen so every mis-ordering gives a different answer:
+    y=100, scale=.5, bias=-10, relu, B_y=4 (clip to [-8, 7]).
+
+    Correct (Fig. 8):  relu(100*.5 - 10) = 40 -> clip -> 7.
+    Saturate-first (the old bug): clip(100)=7 -> 7*.5-10 = -6.5 -> relu
+    -> 0.  Bias-before-scale: (100-10)*.5 = 45 -> 7 (breaks on the
+    negative probe below)."""
+    y = jnp.asarray([100.0, -100.0, 30.0])
+    out = postreduce(y, scale=0.5, bias=-10.0, act="relu", by_bits=4)
+    np.testing.assert_array_equal(np.asarray(out), [7.0, 0.0, 5.0])
+    # and the Postreduce form resolves B_y from the spec's (bx, ba)
+    p = Postreduce(scale=0.5, bias=-10.0, act="relu", saturate=True)
+    out16 = p.apply(jnp.asarray([1e6]), bx=2, ba=3)      # B_y = 16
+    np.testing.assert_array_equal(np.asarray(out16), [2.0 ** 15 - 1])
+    out32 = p.apply(jnp.asarray([1e6]), bx=4, ba=4)      # B_y = 32: no clip
+    np.testing.assert_array_equal(np.asarray(out32), [1e6 * 0.5 - 10.0])
+
+
+def test_spec_by_bits_rule():
+    assert accel.ExecSpec(backend="bpbs", bx=2, ba=3).by_bits == 16
+    assert accel.ExecSpec(backend="bpbs", bx=4, ba=4).by_bits == 32
+
+
+# ------------------------------------------------------ fused-path parity
+
+@pytest.mark.parametrize("backend", ["digital", "digital_int", "bpbs",
+                                     "bpbs_ref", "pallas"])
+def test_fused_equals_unfused_matmul_then_postreduce(backend):
+    spec = accel.ExecSpec(backend=backend, ba=4, bx=4, bank_n=128)
+    y_unf = POST.apply(accel.matmul(X, W, spec), spec.bx, spec.ba)
+    y_f = accel.matmul(X, W, spec, post=POST)
+    if backend == "pallas":
+        np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_unf),
+                                   rtol=1e-5, atol=1e-4)
+    else:
+        np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_unf))
+
+
+@pytest.mark.parametrize("backend", ["digital_int", "bpbs", "pallas"])
+def test_fused_parity_through_compiled_image(backend):
+    """The program (weight-stationary) path composes with the fused
+    epilogue: image + post == image-then-postreduce == on-the-fly+post."""
+    spec = accel.ExecSpec(backend=backend, ba=4, bx=4, bank_n=128)
+    img = _compile_image(W, spec, "proj")
+    y_unf = POST.apply(accel.matmul(X, W, spec, image=img),
+                       spec.bx, spec.ba)
+    y_f = accel.matmul(X, W, spec, image=img, post=POST)
+    if backend == "pallas":
+        np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_unf),
+                                   rtol=1e-5, atol=1e-4)
+    else:
+        np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_unf))
+        # and identical to the on-the-fly fused path
+        np.testing.assert_array_equal(
+            np.asarray(y_f), np.asarray(accel.matmul(X, W, spec,
+                                                     post=POST)))
+
+
+@pytest.mark.parametrize("backend", ["digital_int", "bpbs"])
+def test_ste_gradient_parity_through_fused_epilogue(backend):
+    """d(fused)/d{x, w, scale, bias} == d(postreduce(matmul))/d{...}:
+    STE through the quantized matmul, true VJP through the epilogue."""
+    spec = accel.ExecSpec(backend=backend, ba=4, bx=4, bank_n=128)
+
+    def f_fused(x, w, s, b):
+        return jnp.sum(accel.matmul(
+            x, w, spec, post=Postreduce(scale=s, bias=b, act="gelu",
+                                        saturate=True)))
+
+    def f_unfused(x, w, s, b):
+        p = Postreduce(scale=s, bias=b, act="gelu", saturate=True)
+        return jnp.sum(p.apply(accel.matmul(x, w, spec), spec.bx, spec.ba))
+
+    g_f = jax.grad(f_fused, argnums=(0, 1, 2, 3))(X, W, SCALE, BIAS)
+    g_u = jax.grad(f_unfused, argnums=(0, 1, 2, 3))(X, W, SCALE, BIAS)
+    for a, b in zip(g_f, g_u):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_epilogue_with_tensor_bias_residual():
+    """A residual stream on the datapath bias port (what the MLP down
+    projection does): full-tensor bias, exact parity incl. pallas'
+    outside-kernel fallback (per-column registers only fuse in-kernel)."""
+    res = jnp.asarray(rng.normal(size=(8, 48)), jnp.float32)
+    for backend in ("digital_int", "bpbs", "pallas"):
+        spec = accel.ExecSpec(backend=backend, ba=4, bx=4, bank_n=128)
+        post = Postreduce(bias=res)
+        y_unf = post.apply(accel.matmul(X, W, spec), spec.bx, spec.ba)
+        y_f = accel.matmul(X, W, spec, post=post)
+        np.testing.assert_array_equal(np.asarray(y_f), np.asarray(y_unf))
+
+
+# ------------------------------------------------------- linear-level glue
+
+def test_linear_bias_folds_into_datapath_bias():
+    """linear(b, post=...) == post((x @ w) + b): the projection bias rides
+    the datapath bias registers pre-scale."""
+    from repro.models.layers import linear
+
+    b = jnp.asarray(rng.normal(size=(48,)), jnp.float32)
+    params = {"w": W, "b": b}
+    spec = accel.ExecSpec(backend="digital_int", ba=4, bx=4, bank_n=128)
+    post = Postreduce(scale=SCALE, act="relu")
+    got = linear(params, X, spec, jnp.float32, post=post)
+    want = post.apply(accel.matmul(X, W, spec) + b, spec.bx, spec.ba)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_model_forward_fused_equals_unfused():
+    """olmo (swiglu) + recurrentgemma (rec blocks) forward with
+    cfg.fuse_datapath on/off: identical logits (the f32 reduced configs
+    make act-inside-vs-outside exact)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import forward, init_params
+
+    for name in ("olmo-1b", "recurrentgemma-9b"):
+        cfg = get_config(name).reduced().with_accel("bpbs", ba=4, bx=4)
+        params = init_params(cfg, KEY, max_seq=32)
+        toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+        lg_f, _ = forward(params, toks, cfg)
+        lg_u, _ = forward(params, toks,
+                          dataclasses.replace(cfg, fuse_datapath=False))
+        np.testing.assert_array_equal(np.asarray(lg_f), np.asarray(lg_u))
+
+
+def test_model_fused_no_worse_than_unfused_under_bf16():
+    """bfloat16 configs DIVERGE between fused and unfused — by design:
+    the fused epilogue runs on the f32 recombined output BEFORE the
+    dtype cast (the datapath precedes the DMA, as on chip), while the
+    unfused baseline applies act/residual after it, and per-layer
+    rounding differences compound through the residual stream.  The
+    contract pinned here: fused bf16 approximates the true f32 model at
+    least as well as unfused bf16 does — the reordering is a (slight)
+    numerics improvement, never a drift."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.models import forward, init_params
+
+    cfg = dataclasses.replace(
+        get_config("olmo-1b").reduced().with_accel("digital_int",
+                                                   ba=6, bx=6),
+        dtype="bfloat16")
+    params = init_params(cfg, KEY, max_seq=32)
+    toks = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    lg_f, _ = forward(params, toks, cfg)
+    lg_u, _ = forward(params, toks,
+                      dataclasses.replace(cfg, fuse_datapath=False))
+    lg32, _ = forward(params, toks,
+                      dataclasses.replace(cfg, dtype="float32"))
+    err_f = float(jnp.abs(lg_f - lg32).max())
+    err_u = float(jnp.abs(lg_u - lg32).max())
+    assert err_f <= err_u * 1.5, (err_f, err_u)
+    # and the divergence between the two bf16 orderings stays within the
+    # band of bf16-vs-f32 error itself (same cause, same scale)
+    assert float(jnp.abs(lg_f - lg_u).max()) <= 2.0 * err_u
+
+
+# ---------------------------------------------------------- energy trace
+
+def test_trace_records_datapath_post_ops_and_energy():
+    spec = accel.ExecSpec(backend="bpbs", ba=4, bx=4, bank_n=128,
+                          tag="t.proj")
+    with accel.trace() as recs:
+        accel.matmul(X, W, spec, post=POST)
+        accel.matmul(X, W, spec)
+    assert recs[0].post_ops == 4          # scale, bias, act, saturate
+    assert recs[1].post_ops == 0
+    es = accel.energy_summary(recs)
+    assert es["post_pj"] > 0
+    assert es["by_tag"]["t.proj"]["post_pj"] > 0
+    # the post energy model: ops * m * calls * datapath_out pJ
+    from repro.core import energy as E
+    want = 4 * 48 * 8 * E.ENERGY_PJ[0.85]["datapath_out"]
+    es85 = accel.energy_summary(recs, vdd=0.85)
+    assert es85["post_pj"] == pytest.approx(want)
+
+
+def test_model_decode_trace_has_fused_post_ops():
+    """The serving decode hot path actually fuses: gate activation and
+    MLP residual ride matmul records, not separate XLA ops."""
+    from repro.configs import get_config
+    from repro.models import decode_step, init_cache, init_params
+
+    cfg = get_config("olmo-1b").reduced().with_accel("digital_int",
+                                                     ba=4, bx=4)
+    params = init_params(cfg, KEY, max_seq=32)
+    cache = init_cache(cfg, 2, 32)
+    with accel.trace() as recs:
+        decode_step(params, jnp.asarray([1, 2]), cache, cfg)
+    fused = [r for r in recs if r.post_ops]
+    tags = {r.tag for r in fused}
+    assert "mlp.gate" in tags and "mlp.down" in tags, tags

@@ -168,3 +168,78 @@ def test_slice_splice_roundtrip_pytree_generic():
         for a, b in zip(jax.tree_util.tree_leaves(cache),
                         jax.tree_util.tree_leaves(rebuilt)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_generate_stops_decoding_when_all_rows_hit_eos():
+    """Engine.generate must break out of the decode loop once every row
+    has emitted EOS (padding the tail with eos_id) instead of issuing
+    full-width decode steps to the token budget."""
+    cfg, params, scfg = _setup(max_new_tokens=12, eos_id=-1)
+    eng = Engine(params, cfg, scfg)
+    prompts = jnp.asarray(_ragged_prompts(1, cfg.vocab, lengths=(8,))[0]
+                          )[None, :]
+    base = eng.generate(prompts)
+    assert eng.last_decode_steps == scfg.max_new_tokens - 1
+
+    # greedy decode is deterministic: whatever token the model emits at
+    # position 2 becomes the EOS -> the loop must stop right there
+    # (eos_check_every=1: sync the done flag at every step)
+    eos = int(base[0, 2])
+    eng2 = Engine(params, cfg, ServeConfig(max_seq=scfg.max_seq,
+                                           max_new_tokens=12, eos_id=eos,
+                                           eos_check_every=1))
+    out = eng2.generate(prompts)
+    first = np.asarray(base[0]).tolist().index(eos)
+    assert eng2.last_decode_steps == first, \
+        (eng2.last_decode_steps, first)
+    assert out.shape == base.shape
+    # prefix matches the unconstrained run; tail is all eos padding
+    row = out[0].tolist()
+    np.testing.assert_array_equal(row[:first + 1], base[0, :first + 1])
+    assert all(t == eos for t in row[first:])
+
+    # default check interval K: the host sync runs every K steps, so the
+    # loop may overshoot by < K forced-eos steps but must still stop
+    # early — and the emitted tokens are identical for any interval
+    engK = Engine(params, cfg, ServeConfig(max_seq=scfg.max_seq,
+                                           max_new_tokens=12, eos_id=eos))
+    outK = engK.generate(prompts)
+    K = ServeConfig.eos_check_every
+    assert first <= engK.last_decode_steps < min(first + K, 12)
+    np.testing.assert_array_equal(outK, out)
+
+
+def test_generate_eos_rows_finish_at_different_steps():
+    """Mixed batch: the loop runs until the LAST row finishes, earlier
+    rows hold eos — same outputs as the full-budget loop."""
+    cfg, params, scfg = _setup(max_new_tokens=10, eos_id=-1)
+    eng = Engine(params, cfg, scfg)
+    prompts = jnp.asarray(np.stack(_ragged_prompts(2, cfg.vocab,
+                                                   lengths=(8, 8))))
+    base = eng.generate(prompts)
+    row0, row1 = base[0].tolist(), base[1].tolist()
+    common = set(row0) & set(row1)
+    if common:
+        # both rows emit it -> the loop stops when the LATER row finishes
+        eos = sorted(common)[0]
+        i0, i1 = row0.index(eos), row1.index(eos)
+        want_steps = max(i0, i1)
+        ends = ((0, i0), (1, i1))
+    else:
+        # only row 0 emits it -> row 1 runs its full budget and the loop
+        # must NOT stop early; row 0 holds eos from its hit onward
+        eos = row0[2]
+        i0 = row0.index(eos)
+        want_steps = scfg.max_new_tokens - 1
+        ends = ((0, i0),)
+    eng2 = Engine(params, cfg, ServeConfig(max_seq=scfg.max_seq,
+                                           max_new_tokens=10, eos_id=eos,
+                                           eos_check_every=1))
+    out = eng2.generate(prompts)
+    assert eng2.last_decode_steps == want_steps
+    for b, i in ends:
+        row = out[b].tolist()
+        np.testing.assert_array_equal(row[:i + 1], base[b, :i + 1])
+        assert all(t == eos for t in row[i:])
+    if not common:
+        np.testing.assert_array_equal(out[1], base[1])

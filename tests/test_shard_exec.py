@@ -376,3 +376,63 @@ def test_sharded_slot_splice_parity_vs_solo():
         print("OK")
     """)
     assert "OK" in out
+
+
+# ------------------------------------------------- fused datapath epilogue
+
+_FUSED_PARITY = """
+    import jax, jax.numpy as jnp, numpy as np
+    from repro import accel
+    from repro.core.datapath import Postreduce
+    from repro.accel.program import _compile_image, partition_for
+    from repro.distributed.autoshard import use_mesh
+
+    devices = {devices}
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    post = Postreduce(
+        scale=jnp.asarray(rng.normal(size=(64,)), jnp.float32),
+        bias=jnp.asarray(rng.normal(size=(64,)), jnp.float32),
+        act="relu", saturate=True)
+    mesh = jax.make_mesh((devices,), ("model",))
+    # bank_n = per-device rows so row-parallel bpbs stays bit-exact
+    for tag in ("mlp.gate", "mlp.down"):        # -> col, row partitions
+        for backend in ("digital_int", "bpbs", "pallas"):
+            spec = accel.ExecSpec(backend=backend, ba=4, bx=4,
+                                  bank_n=256 // devices, tag=tag)
+            part = partition_for(tag, 256, 64, devices)
+            img = _compile_image(w, spec, "p", shards=devices,
+                                 partition=part)
+            assert img.partition == ("row" if tag == "mlp.down" else "col")
+            with use_mesh(mesh, None):
+                y_f = jax.jit(lambda x: accel.matmul(
+                    x, w, spec, image=img, post=post))(x)
+                y_u = jax.jit(lambda x: post.apply(accel.matmul(
+                    x, w, spec, image=img), spec.bx, spec.ba))(x)
+            y_ref = jax.jit(lambda x: accel.matmul(x, w, spec,
+                                                   post=post))(x)
+            d_u = float(jnp.abs(y_f - y_u).max())
+            d_r = float(jnp.abs(jnp.asarray(y_f) - y_ref).max())
+            tol = 0.0 if backend != "pallas" else 1e-4
+            assert d_u <= tol and d_r <= tol, (tag, backend, d_u, d_r)
+    print("FUSED_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("devices", [2, 4, 8])
+def test_sharded_fused_postreduce_parity(devices):
+    """Acceptance: the fused Postreduce path under shard_map (epilogue
+    inside the body — local rescale+registers on "col" tiles, applied
+    after the psum on "row" tiles) is bit-for-bit the unfused
+    matmul-then-postreduce AND the unsharded fused path on
+    digital_int/bpbs (allclose on pallas), for 2/4/8 devices."""
+    out = run_py(_FUSED_PARITY.format(devices=devices), devices=devices)
+    assert "FUSED_OK" in out
+
+
+def test_sharded_fused_postreduce_parity_2dev_fast():
+    """Tier-1-visible slice of the fused shard parity matrix."""
+    out = run_py(_FUSED_PARITY.format(devices=2), devices=2)
+    assert "FUSED_OK" in out
