@@ -82,6 +82,107 @@ def run_ragged_traffic(n_slots: int = 4, n_requests: int = 12,
     return {"ratio": ratio, "slot": st_s, "generational": st_g}
 
 
+def run_poisson_traffic(json_path: str = "BENCH_traffic.json",
+                        n_slots: int = 4, n_requests: int = 16,
+                        mean_interarrival_s: float = 0.05,
+                        seed: int = 0) -> dict:
+    """Open-loop Poisson traffic through the fixed-slot batcher and the
+    paged scheduler (DESIGN.md §11), same trace, wall-clock arrivals via
+    each loop's ``feed`` hook.
+
+    Both servers are jit-warmed on a small pre-trace covering every
+    prompt bucket, then timed end-to-end on the Poisson trace; the
+    sustained rate is generated tokens / wall seconds (the arrival gaps
+    are identical, so the comparison isolates serving efficiency: the
+    paged loop's one host sync per ``decode_block`` steps vs one per
+    step).  Output token streams must be request-for-request identical
+    (greedy; and the paged gather view is bit-equal to the contiguous
+    cache).  Writes ``BENCH_traffic.json`` BEFORE asserting paged >=
+    slot so a regression still ships the artifact.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serve import ContinuousBatcher, PagedScheduler, ServeConfig
+
+    cfg = get_config("olmo-1b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0), max_seq=512)
+    scfg = ServeConfig(max_seq=256, max_new_tokens=128, kv_block_size=16)
+    rng = np.random.default_rng(seed)
+    sizes = [8, 32, 128]
+    lengths = rng.choice(sizes, size=n_requests)
+    budgets = [int(b) for b in rng.choice(sizes, size=n_requests)]
+    prompts = [rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32)
+               for l in lengths]
+    arrivals = np.cumsum(rng.exponential(mean_interarrival_s,
+                                         size=n_requests))
+    warm = [rng.integers(1, cfg.vocab, (s,)).astype(np.int32)
+            for s in sizes]
+
+    def drive(server):
+        # warm every jit shape (prefill buckets, decode, splice) outside
+        # the timed window — one request per prompt bucket
+        for p in warm:
+            server.submit(p, max_new_tokens=2)
+        server.run()
+        base = dict(server.stats)
+        idx = 0
+        t0 = time.perf_counter()
+
+        def feed():
+            nonlocal idx
+            now = time.perf_counter() - t0
+            while idx < len(arrivals) and arrivals[idx] <= now:
+                server.submit(prompts[idx], max_new_tokens=budgets[idx])
+                idx += 1
+            return idx < len(arrivals)
+
+        results = server.run(feed=feed)
+        elapsed = time.perf_counter() - t0
+        tokens = server.stats["generated_tokens"] - base["generated_tokens"]
+        timed = {r: results[r] for r in results
+                 if r >= len(warm)}               # drop the warmup rids
+        return timed, tokens / elapsed, elapsed, dict(server.stats)
+
+    slot_res, slot_tps, slot_s, slot_stats = drive(
+        ContinuousBatcher(params, cfg, scfg, n_slots=n_slots))
+    paged_res, paged_tps, paged_s, paged_stats = drive(
+        PagedScheduler(params, cfg, scfg, n_slots=n_slots))
+
+    assert set(slot_res) == set(paged_res)
+    mismatched = [r for r in slot_res if slot_res[r] != paged_res[r]]
+    ratio = paged_tps / slot_tps
+    results = {
+        "model": "olmo-1b.reduced", "n_slots": n_slots,
+        "n_requests": n_requests,
+        "mean_interarrival_s": mean_interarrival_s,
+        "decode_block": scfg.decode_block,
+        "kv_block_size": scfg.kv_block_size,
+        "slot": {"tokens_per_s": slot_tps, "wall_s": slot_s,
+                 "stats": slot_stats},
+        "paged": {"tokens_per_s": paged_tps, "wall_s": paged_s,
+                  "stats": paged_stats},
+        "paged_over_slot": ratio,
+        "streams_identical": not mismatched,
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    emit("serve_traffic_slot", 0.0,
+         f"tokens_per_s={slot_tps:.1f};wall_s={slot_s:.2f}")
+    emit("serve_traffic_paged", 0.0,
+         f"tokens_per_s={paged_tps:.1f};wall_s={paged_s:.2f};"
+         f"ratio={ratio:.2f}")
+    assert not mismatched, (
+        f"paged token streams must be identical to the slot batcher; "
+        f"requests {mismatched} differ")
+    assert ratio >= 1.0, (
+        f"paged serving must sustain at least the slot batcher's rate on "
+        f"Poisson traffic, got {ratio:.2f}x")
+    return results
+
+
 def run_decode_cached(json_path: str = "BENCH_decode.json",
                       backends=("digital_int", "bpbs"),
                       batch: int = 4, steps: int = 8,
@@ -371,9 +472,18 @@ if __name__ == "__main__":
                     help="output path for the sharded scaling benchmark")
     ap.add_argument("--shard-only", action="store_true",
                     help="run only the sharded scaling benchmark")
+    ap.add_argument("--traffic", action="store_true",
+                    help="run the Poisson paged-vs-slot traffic benchmark, "
+                         "emitting --traffic-json")
+    ap.add_argument("--traffic-only", action="store_true",
+                    help="run only the Poisson traffic benchmark")
+    ap.add_argument("--traffic-json", default="BENCH_traffic.json",
+                    help="output path for the Poisson traffic benchmark")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    if args.shard_only:
+    if args.traffic_only:
+        run_poisson_traffic(json_path=args.traffic_json)
+    elif args.shard_only:
         run_sharded_scaling(json_path=args.shard_json,
                             max_devices=args.devices or 8)
     elif args.fused_only:
@@ -385,6 +495,8 @@ if __name__ == "__main__":
         run_decode_cached(json_path=args.decode_json)
         if args.fused:
             run_fused_decode(json_path=args.fused_json)
+        if args.traffic:
+            run_poisson_traffic(json_path=args.traffic_json)
         if args.devices:
             run_sharded_scaling(json_path=args.shard_json,
                                 max_devices=args.devices)

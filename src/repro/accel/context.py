@@ -117,6 +117,13 @@ class MvmRecord:
     # (scale / bias / activation / saturate each count 1) — what
     # energy_summary charges as datapath post-op energy
     post_ops: int = 0
+    # measured input sparsity (repro.core.sparsity, paper Fig. 6b): the
+    # fraction of zero-valued quantized input elements whose broadcast
+    # the AND-logic controller gates off.  Only measurable when the
+    # dispatch sees CONCRETE inputs (an eager call under trace()); a
+    # jitted trace records None and energy_summary falls back to its
+    # uniform ``sparsity`` argument.
+    sparsity: Optional[float] = None
 
 
 _TRACE_STACK: list[list] = []
@@ -201,6 +208,12 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
                    readout: str = "adc") -> dict:
     """Chip-model cost of a traced run, from :mod:`repro.core.energy`.
 
+    ``sparsity`` is the uniform input-sparsity assumption; a record that
+    carries its own measured ``MvmRecord.sparsity`` (eager dispatches —
+    see the field) uses that instead, and the calls-weighted mean of the
+    measured values is surfaced as ``input_sparsity`` (None when nothing
+    was measured).
+
     Digital records are counted (``mvms``) but carry no accelerator
     energy — they never touched the CIMU.  Dispatches whose weight image
     is *streamed* (over the bank allocator's capacity) additionally
@@ -244,6 +257,8 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     load_pj = 0.0
     load_cycles = 0
     post_pj = 0.0
+    sp_weight = 0
+    sp_sum = 0.0
     for r in records:
         row = by_tag.setdefault(
             r.tag or r.backend,
@@ -256,7 +271,13 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
         n_loc = r.n // d_sh if r.partition == "row" else r.n
         m_loc = r.m // d_sh if r.partition == "col" else r.m
         shape = E.MvmShape(n=n_loc, m=m_loc, ba=r.ba, bx=r.bx)
-        pj = E.mvm_energy_pj(shape, vdd, sparsity, readout)["total"] \
+        r_sp = getattr(r, "sparsity", None)
+        if r_sp is not None:
+            sp_sum += r_sp * r.calls
+            sp_weight += r.calls
+        pj = E.mvm_energy_pj(shape, vdd,
+                             sparsity if r_sp is None else r_sp,
+                             readout)["total"] \
             * r.calls * d_sh
         cyc = E.mvm_cycles(shape, readout) * r.calls
         if r.loads:
@@ -279,4 +300,6 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
         total_cycles += cyc
     return {"total_pj": total_pj, "total_cycles": total_cycles,
             "load_pj": load_pj, "load_cycles": load_cycles,
-            "post_pj": post_pj, "by_tag": by_tag}
+            "post_pj": post_pj,
+            "input_sparsity": (sp_sum / sp_weight if sp_weight else None),
+            "by_tag": by_tag}

@@ -35,6 +35,22 @@ from .registry import get_backend
 from .spec import ExecSpec
 
 
+def _measured_sparsity(spec: ExecSpec, x: jax.Array) -> Optional[float]:
+    """Input bit-plane sparsity the AND-logic controller would gate
+    (repro.core.sparsity, paper Fig. 6b): the zero fraction of the input
+    quantized onto the spec's coding grid.  Only measurable when the
+    dispatch sees concrete values — inside a jit trace ``x`` is a Tracer
+    and the record carries None (energy_summary then falls back to its
+    uniform sparsity argument)."""
+    if spec.backend == "digital" or isinstance(x, jax.core.Tracer):
+        return None
+    from repro.core.quant import quantize
+    from repro.core.sparsity import element_mask, sparsity_fraction
+
+    qx = quantize(x, spec.bx, spec.coding)
+    return float(sparsity_fraction(element_mask(qx.q)))
+
+
 def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
                 image=None, post=None) -> None:
     if not tracing():
@@ -57,6 +73,7 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
         devices=image.devices if image is not None else 1,
         partition=(image.partition or "") if image is not None else "",
         post_ops=post.n_ops() if post is not None else 0,
+        sparsity=_measured_sparsity(spec, x),
     ))
 
 

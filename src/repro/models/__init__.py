@@ -1,7 +1,9 @@
 """Model zoo: composable layers + the unified LM API over all assigned
 architectures (see repro.configs)."""
 from .model import (DecodeCache, decode_step, forward, init_cache,
-                    init_params, loss_fn, prefill, slice_slot, splice_slot)
+                    init_params, loss_fn, prefill, prefill_resume,
+                    slice_slot, splice_slot)
 
 __all__ = ["DecodeCache", "decode_step", "forward", "init_cache",
-           "init_params", "loss_fn", "prefill", "slice_slot", "splice_slot"]
+           "init_params", "loss_fn", "prefill", "prefill_resume",
+           "slice_slot", "splice_slot"]

@@ -331,16 +331,24 @@ def attention(params, x, cfg, positions, cache: Optional[KVCache] = None,
                               off, axis=1)
             new_cache = KVCache(ck, cv)
     else:
+        # decode / chunked-prefill resume: write the s new tokens (s == 1
+        # on the decode hot path) into the ring cache at their per-row
+        # slots and attend over the whole cache.  Slots beyond each row's
+        # written history carry garbage but ring_slot_positions marks them
+        # negative, so _pos_mask hides them — their probability is an
+        # exact 0.0 and they contribute nothing to the PV sums.
         length = cache.k.shape[1]
         cp = _row_positions(cache_pos, b)
-        slot = jnp.mod(cp, length)
-        ck = cache.k.at[jnp.arange(b), slot].set(k[:, 0].astype(cache.k.dtype))
-        cv = cache.v.at[jnp.arange(b), slot].set(v[:, 0].astype(cache.v.dtype))
+        offs = cp[:, None] + jnp.arange(s)[None, :]           # [B, S]
+        slot = jnp.mod(offs, length)
+        rows = jnp.arange(b)[:, None]
+        ck = cache.k.at[rows, slot].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[rows, slot].set(v.astype(cache.v.dtype))
         new_cache = KVCache(ck, cv)
-        kv_pos = ring_slot_positions(length, cp)              # [B, L]
+        kv_pos = ring_slot_positions(length, cp + (s - 1))    # [B, L]
         o = sdpa(q, ck, cv, causal=True, window=cfg.attn_window,
                  dtype=dtype, kv_positions=kv_pos,
-                 q_positions=cp[:, None])
+                 q_positions=offs)
     out = linear(params["wo"], o.reshape(b, s, h * hd), sp("attn.o"), dtype)
     return out, new_cache
 
@@ -414,13 +422,19 @@ def mla_attention(params, x, cfg, positions, cache: Optional[MLACache] = None,
                 (0, 0, 0))
             new_cache = MLACache(cc, cr)
     else:
+        # decode / chunked-prefill resume: write all s new latents at the
+        # rows' absolute positions (s == 1 on the decode hot path).  Slots
+        # at or above a row's position hold zeros/garbage; they are hidden
+        # by the causal mask on q_pos (exact-zero probability).
         cp = _row_positions(cache_pos, b)
-        rows = jnp.arange(b)
-        cc = cache.c_kv.at[rows, cp].set(c_kv[:, 0])
-        cr = cache.k_rope.at[rows, cp].set(k_rope[:, 0, 0, :])
+        offs = cp[:, None] + jnp.arange(s)[None, :]           # [B, S]
+        rows = jnp.arange(b)[:, None]
+        cc = cache.c_kv.at[rows, offs].set(c_kv.astype(cache.c_kv.dtype))
+        cr = cache.k_rope.at[rows, offs].set(
+            k_rope[:, :, 0, :].astype(cache.k_rope.dtype))
         new_cache = MLACache(cc, cr)
         full_c, full_rope, q_off = cc, cr[:, :, None, :], 0
-        q_pos = cp[:, None]
+        q_pos = offs
 
     kvu = linear(params["w_ukv"], full_c, sp("attn.ukv"), dtype)
     kvu = cs(kvu.reshape(b, full_c.shape[1], h, dn + dv),

@@ -265,6 +265,43 @@ def prefill(params, tokens, cfg, s_max: Optional[int] = None,
     return logits[:, 0], DecodeCache(layers, pos_out, cross_kv)
 
 
+def prefill_resume(params, tokens, cfg, cache: DecodeCache):
+    """Continue a prefill: run ``tokens`` [B, S] (dense, no padding) on top
+    of an existing cache, starting at each row's ``cache.pos``.
+
+    This is the chunked-prefill primitive (serve.scheduler): a long prompt
+    is split into chunks so prefill work can interleave with decode steps
+    instead of stalling the decode loop.  Attention/MLA write all S new
+    keys at their absolute per-row positions and attend causally over the
+    whole cache; the recurrent mixers run their sequence path seeded from
+    the carried conv/SSM/LRU state (``ssd_chunked(init_state=...)``,
+    RG-LRU's ``h0`` fold-in).  Returns (last-position logits, cache with
+    ``pos + S``).
+
+    Exactness: for attention-family archs in a float (digital) policy the
+    resumed run is the full prefill bit-for-bit — masked positions carry
+    exact-zero probability.  SSD chunk boundaries and the LRU associative
+    scan reassociate float sums across chunk splits, and per-tensor input
+    quantization sees a different amax per chunk, so ssm/rec archs and
+    quantized policies match to float tolerance instead.  Encoder-decoder
+    archs are not supported (the encoder runs whole in prefill)."""
+    if cfg.is_encdec:
+        raise NotImplementedError(
+            "chunked prefill is not supported for encoder-decoder archs")
+    dtype = _dtype(cfg)
+    b, s = tokens.shape
+    pos = jnp.asarray(cache.pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    positions = pos[:, None] + jnp.arange(s)[None, :]          # [B, S]
+    x = _embed_inputs(params, tokens, cfg, None, dtype)
+    x, layers, _ = tfm.apply_stack(params["stack"], x, cfg, positions,
+                                   cache.layers, cache_pos=pos, dtype=dtype)
+    x = norm(params["final_norm"], x[:, -1:], cfg.norm)
+    logits = _lm_logits(params, x, cfg, dtype)
+    return logits[:, 0], DecodeCache(layers, pos + s, cache.cross_kv)
+
+
 def decode_step(params, token, cache: DecodeCache, cfg):
     """One decode step.  token: [B] int32.  Returns (logits [B, vocab],
     updated cache).  ``cache.pos`` is per-slot ([B]; a scalar is accepted

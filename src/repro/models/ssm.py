@@ -74,9 +74,14 @@ def _segsum(dA):
     return jnp.where(i >= j, L, -jnp.inf)
 
 
-def ssd_chunked(x, dt, A, B_, C_, chunk: int):
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, init_state=None):
     """Chunked SSD.  x: [B,S,H,P]; dt: [B,S,H]; A: [H]; B_,C_: [B,S,N].
-    Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+
+    ``init_state`` ([B,H,P,N], default zeros) seeds the inter-chunk
+    recurrence — a chunked-prefill resume continues from a carried SSM
+    state exactly as if the earlier tokens were part of this call
+    (chunk-boundary float ordering aside; see serve.scheduler)."""
     b, s, h, p = x.shape
     n = B_.shape[-1]
     pad = (-s) % chunk
@@ -118,7 +123,8 @@ def ssd_chunked(x, dt, A, B_, C_, chunk: int):
 
     states_t = states.transpose(1, 0, 2, 3, 4)             # [nc,B,H,P,N]
     decay_t = chunk_decay.transpose(1, 0, 2)               # [nc,B,H]
-    init = jnp.zeros_like(states_t[0])
+    init = (jnp.zeros_like(states_t[0]) if init_state is None
+            else init_state.astype(states_t.dtype))
     final_state, prev_states = jax.lax.scan(step, init, (states_t, decay_t))
     prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # [B,nc,H,P,N]
 
@@ -174,7 +180,9 @@ def ssm_forward(params, x, cfg, state: Optional[SSMState] = None,
         y = jnp.einsum("bn,bhpn->bhp", C_[:, 0], new_ssm)[:, None]
     else:
         y, new_ssm = ssd_chunked(xs.astype(jnp.float32), dt, A, B_, C_,
-                                 cfg.ssm_chunk)
+                                 cfg.ssm_chunk,
+                                 init_state=(state.ssm if state is not None
+                                             else None))
     y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
     y = y.reshape(b, s, d_inner).astype(dtype)
 

@@ -61,7 +61,10 @@ def apply_block(params: dict, x, cfg, kind: str, positions, cache=None,
     real token) enables left-padded ragged prefill — see the mixers."""
     from repro.distributed.autoshard import cs
 
-    decode = cache_pos is not None
+    # single-step decode for the recurrent mixers; a multi-token call with
+    # cache_pos (chunked-prefill resume) runs their sequence path seeded
+    # from the carried state instead
+    decode = cache_pos is not None and x.shape[1] == 1
     # residual stream: DP on batch (+ optional Megatron-SP seq sharding)
     x = cs(x, ("dp", ["tp"] if cfg.sp_residual else None, None))
     h = norm(params["ln1"], x, cfg.norm)

@@ -1,0 +1,14 @@
+"""Serving: the slot-splicing continuous batcher (reference baseline)
+and the block-table paged scheduler (DESIGN.md §11)."""
+from .engine import ContinuousBatcher, Engine, ServeConfig
+from .kv import (BlockAllocator, PagedCache, PagedLayout, build_layout,
+                 gather_cache, init_paged_cache, scatter_decode,
+                 splice_request)
+from .scheduler import PagedScheduler
+
+__all__ = [
+    "ContinuousBatcher", "Engine", "ServeConfig",
+    "BlockAllocator", "PagedCache", "PagedLayout", "build_layout",
+    "gather_cache", "init_paged_cache", "scatter_decode", "splice_request",
+    "PagedScheduler",
+]

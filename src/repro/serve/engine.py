@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -55,6 +56,43 @@ class ServeConfig:
     # engine can hold a different one (no module-global policy).
     mesh: Optional[object] = None               # jax.sharding.Mesh
     shard_policy: Optional[object] = None       # distributed.ShardPolicy
+    # paged serving (serve.kv / serve.scheduler).  kv_block_size is the
+    # positions-per-block granularity of the shared cache pool;
+    # decode_block is how many decode steps the paged scheduler runs per
+    # jitted dispatch (one host sync per block); prefill_chunk chunks
+    # long admission prefills so decode interleaves between pieces
+    # (None = whole-prompt prefill, exact for every arch — see
+    # PagedScheduler for the chunked-exactness envelope);
+    # max_admit_per_step caps admissions per ContinuousBatcher decode
+    # step so an arrival burst can't stall live slots behind a
+    # head-of-line run of prefills (None = admit greedily).
+    kv_block_size: int = 16
+    decode_block: int = 8
+    prefill_chunk: Optional[int] = None
+    max_admit_per_step: Optional[int] = 1
+
+    def __post_init__(self):
+        def _pos(name):
+            v = getattr(self, name)
+            if v <= 0:
+                raise ValueError(f"ServeConfig.{name} must be positive, "
+                                 f"got {v}")
+        for name in ("max_seq", "max_new_tokens", "eos_check_every",
+                     "kv_block_size", "decode_block"):
+            _pos(name)
+        if self.max_seq % self.kv_block_size:
+            raise ValueError(
+                f"ServeConfig.kv_block_size={self.kv_block_size} must "
+                f"divide the cache capacity max_seq={self.max_seq}")
+        if self.prefill_chunk is not None and self.prefill_chunk <= 0:
+            raise ValueError(f"ServeConfig.prefill_chunk must be positive "
+                             f"or None, got {self.prefill_chunk}")
+        if self.max_admit_per_step is not None and self.max_admit_per_step <= 0:
+            raise ValueError(f"ServeConfig.max_admit_per_step must be "
+                             f"positive or None, got {self.max_admit_per_step}")
+        if self.temperature < 0:
+            raise ValueError(f"ServeConfig.temperature must be >= 0, "
+                             f"got {self.temperature}")
 
 
 class Engine:
@@ -149,6 +187,19 @@ class Engine:
                              jnp.asarray(steps, jnp.int32),
                              logits).astype(jnp.int32)
 
+    def prefill_single(self, prompt: np.ndarray):
+        """Pad-masked batch-1 prefill at a power-of-two bucket length
+        (one jit compile per bucket); returns (logits [1, V], batch-1
+        cache).  The admission path of both batchers."""
+        L = len(prompt)
+        sb = min(max(_bucket(L), L), self.scfg.max_seq)
+        toks = np.zeros((1, sb), np.int32)
+        mask = np.zeros((1, sb), bool)
+        toks[0, sb - L:] = prompt
+        mask[0, sb - L:] = True
+        return self._prefill_padded(self.params, jnp.asarray(toks),
+                                    jnp.asarray(mask))
+
     def generate(self, prompts: jax.Array,
                  frontend_embeds: Optional[jax.Array] = None,
                  request_ids=None) -> np.ndarray:
@@ -197,6 +248,13 @@ class Engine:
         return gen
 
 
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
 @dataclasses.dataclass
 class _Slot:
     rid: int
@@ -225,6 +283,8 @@ class ContinuousBatcher:
     """
 
     def __init__(self, params, cfg, serve_cfg: ServeConfig, n_slots: int):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
         self.engine = Engine(params, cfg, serve_cfg)
         # the engine's params carry the installed program images: admission
         # re-prefills and splices must reuse them, not the raw weights
@@ -258,40 +318,33 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------ slot path
 
-    @staticmethod
-    def _bucket(n: int) -> int:
-        b = 8
-        while b < n:
-            b *= 2
-        return b
+    _bucket = staticmethod(_bucket)
 
     def _prefill_request(self, req: _Request):
         """Single-request pad-masked prefill at a bucketed length; returns
         (first sampled token, batch-1 cache)."""
-        L = len(req.prompt)
-        sb = min(max(self._bucket(L), L), self.scfg.max_seq)
-        toks = np.zeros((1, sb), np.int32)
-        mask = np.zeros((1, sb), bool)
-        toks[0, sb - L:] = req.prompt
-        mask[0, sb - L:] = True
-        logits, cache = self.engine._prefill_padded(
-            self.params, jnp.asarray(toks), jnp.asarray(mask))
+        logits, cache = self.engine.prefill_single(req.prompt)
         self.stats["prefills"] += 1
         tok = self.engine.sample(logits, np.asarray([req.rid]),
                                  np.zeros(1, np.int64))
         return int(np.asarray(tok)[0]), cache
 
-    def run(self, on_token: Optional[Callable[[int, int], None]] = None
+    def run(self, on_token: Optional[Callable[[int, int], None]] = None,
+            feed: Optional[Callable[[], bool]] = None
             ) -> dict[int, list[int]]:
         """Serve the queue to completion; returns {rid: tokens} (tokens end
         at EOS inclusive, or at the request's budget).  ``on_token(rid,
-        token)`` streams every generated token as it is sampled."""
+        token)`` streams every generated token as it is sampled.  ``feed``
+        (if given) is called once per loop iteration to inject wall-clock
+        arrivals via ``submit``; while it returns True the loop keeps
+        polling instead of exiting when both queue and slots drain."""
         b = self.n_slots
         eos = self.scfg.eos_id
         cache = self.engine.init_cache(b)
         cur = np.zeros(b, np.int32)
         slots: list[Optional[_Slot]] = [None] * b
         emitted: dict[int, list[int]] = {}
+        feeding = feed is not None
 
         def emit(rid, tok):
             emitted[rid].append(tok)
@@ -300,14 +353,22 @@ class ContinuousBatcher:
                 on_token(rid, tok)
 
         while True:
-            # per-slot admission: refill every free slot before stepping
+            if feeding:
+                feeding = bool(feed())
+            # per-slot admission, capped at max_admit_per_step prefills per
+            # decode step: an arrival burst used to stall every live slot
+            # behind a head-of-line run of admission prefills
+            cap = self.scfg.max_admit_per_step
+            admitted = 0
             for i in range(b):
-                while slots[i] is None and self.pending:
+                while (slots[i] is None and self.pending
+                       and (cap is None or admitted < cap)):
                     req = self.pending.popleft()
                     if req.budget <= 0:
                         self.results[req.rid] = []
                         continue
                     tok, slot_cache = self._prefill_request(req)
+                    admitted += 1
                     emitted[req.rid] = []
                     emit(req.rid, tok)
                     if (eos >= 0 and tok == eos) or req.budget <= 1:
@@ -318,6 +379,11 @@ class ContinuousBatcher:
                     slots[i] = _Slot(req.rid, req.budget, 1)
             active = [i for i in range(b) if slots[i] is not None]
             if not active:
+                if self.pending:
+                    continue           # capped admission left work queued
+                if feeding:
+                    time.sleep(5e-4)   # idle but arrivals may still come
+                    continue
                 break
 
             # one fixed-width decode step for every slot (idle rows ride

@@ -1,0 +1,333 @@
+"""Block-table paged KV cache (DESIGN.md §11).
+
+The slot batcher pads every slot's cache to ``max_seq``; ragged traffic
+therefore reserves worst-case HBM per slot.  This module pools the
+sequence-indexed cache leaves into shared physical *blocks* of
+``block_size`` positions each, addressed through a per-request block
+table — the vLLM layout, made pytree-generic the same way
+``slice_slot``/``splice_slot`` are:
+
+* :func:`build_layout` classifies every leaf of ``DecodeCache.layers``
+  by probing ``jax.eval_shape(init_cache)`` at two batch sizes and two
+  sequence capacities: a dim that tracks the batch size is the batch
+  axis; a dim that tracks ``s_max`` is the sequence axis and the leaf is
+  *paged* (KV rings, MLA latents).  Leaves with no sequence dim (SSM /
+  LRU states, short ring caches capped by a window) stay per-slot dense
+  state.  No per-arch code — the probe is the convention.
+* a paged leaf ``[.., B, L, ..]`` becomes a pool ``[.., NB, bs, ..]``
+  over one shared block-id space; logical block ``j`` of slot ``b``
+  lives at physical block ``tables[b, j]``.  Entry value ``NB`` (one
+  past the last block) is the OUT-OF-BOUNDS sentinel: gathers fill 0
+  (exactly the zeros a fresh contiguous cache holds) and scatters drop
+  — which is also what makes retired slots' in-flight decode writes
+  vanish instead of corrupting reused blocks.
+* :func:`gather_cache` materializes the dense ``DecodeCache`` view a
+  decode step consumes; :func:`scatter_decode` writes back only the
+  blocks a K-step decode run touched; :func:`splice_request` is the
+  paged analog of ``splice_slot`` for admission.
+
+Because unwritten pool positions read as exact zeros and ring/causal
+position masks give masked slots an exact-zero softmax probability, the
+gathered view is bit-for-bit the contiguous cache — paged execution is
+token-identical to the slot batcher (tests/test_paged.py).
+
+The free-list :class:`BlockAllocator` is host-side and trivial on
+purpose: block ids are interchangeable, so fragmentation cannot occur —
+any ``n`` free blocks serve any request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import DecodeCache, init_cache
+
+
+# ------------------------------------------------------------- allocator
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` interchangeable block ids.
+
+    ``alloc(n)`` returns ``n`` ids or ``None`` (never partial — the
+    caller defers admission or preempts on backpressure instead of
+    crashing); ``free(ids)`` returns them.  Double-frees and foreign ids
+    raise — the scheduler's table bookkeeping must stay consistent."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks <= 0:
+            raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, -1, -1))   # pop() ascending
+        self._held: set[int] = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        ids = [self._free.pop() for _ in range(n)]
+        self._held.update(ids)
+        return ids
+
+    def free(self, ids) -> None:
+        for i in ids:
+            if i not in self._held:
+                raise ValueError(f"free of unallocated block {i}")
+            self._held.discard(i)
+            self._free.append(i)
+
+
+# ---------------------------------------------------------------- layout
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static description of how ``DecodeCache.layers`` pages.
+
+    Per flattened leaf (aligned with ``treedef``): the batch axis, the
+    sequence axis (``None`` for per-slot state leaves), and the leaf's
+    own cache length ``L`` (rings may be shorter than ``s_max``).
+    ``table_width`` is ``max(L) // block_size`` — one table row covers
+    every leaf; ring leaves index it modulo their own ``L // bs``."""
+
+    treedef: Any
+    batch_axes: tuple
+    seq_axes: tuple
+    lengths: tuple
+    leaf_shapes: tuple
+    leaf_dtypes: tuple
+    block_size: int
+    num_blocks: int
+    table_width: int
+    n_slots: int
+    s_max: int
+
+    @property
+    def sentinel(self) -> int:
+        return self.num_blocks
+
+
+def build_layout(cfg, n_slots: int, s_max: int, block_size: int,
+                 num_blocks: Optional[int] = None) -> PagedLayout:
+    if block_size <= 0:
+        raise ValueError(f"block_size must be positive, got {block_size}")
+    t0 = jax.eval_shape(lambda: init_cache(cfg, n_slots, s_max))
+    tb = jax.eval_shape(lambda: init_cache(cfg, n_slots + 1, s_max))
+    ts = jax.eval_shape(lambda: init_cache(cfg, n_slots, s_max + block_size))
+    if t0.cross_kv is not None:
+        raise NotImplementedError("paged caches do not cover encoder-decoder "
+                                  "cross_kv")
+    l0, treedef = jax.tree_util.tree_flatten(t0.layers)
+    lb = jax.tree_util.tree_leaves(tb.layers)
+    ls = jax.tree_util.tree_leaves(ts.layers)
+
+    def _changed(a, b):
+        d = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(d) > 1:
+            raise ValueError(f"ambiguous cache leaf {a.shape} vs {b.shape}")
+        return d[0] if d else None
+
+    b_axes, q_axes, lengths = [], [], []
+    for a, b, c in zip(l0, lb, ls):
+        b_ax = _changed(a, b)
+        if b_ax is None:
+            raise ValueError(f"cache leaf {a.shape} has no batch dim")
+        q_ax = _changed(a, c)
+        if q_ax is not None:
+            L = a.shape[q_ax]
+            if q_ax != b_ax + 1:
+                raise NotImplementedError(
+                    f"paged leaf {a.shape}: sequence axis {q_ax} must "
+                    f"directly follow batch axis {b_ax}")
+            if L % block_size:
+                raise ValueError(
+                    f"kv_block_size={block_size} does not divide the "
+                    f"cache length {L} of leaf {a.shape}")
+            lengths.append(L)
+        else:
+            lengths.append(None)
+        b_axes.append(b_ax)
+        q_axes.append(q_ax)
+
+    widths = [L // block_size for L in lengths if L is not None]
+    table_width = max(widths, default=1)
+    if num_blocks is None:
+        num_blocks = max(1, n_slots * table_width)
+    return PagedLayout(
+        treedef=treedef,
+        batch_axes=tuple(b_axes), seq_axes=tuple(q_axes),
+        lengths=tuple(lengths),
+        leaf_shapes=tuple(l.shape for l in l0),
+        leaf_dtypes=tuple(l.dtype for l in l0),
+        block_size=block_size, num_blocks=int(num_blocks),
+        table_width=table_width, n_slots=n_slots, s_max=s_max)
+
+
+class PagedCache(NamedTuple):
+    """Device half of the paged state: the pools tree (paged leaves as
+    ``[.., NB, bs, ..]`` pools, state leaves dense ``[.., B, ..]``) plus
+    the per-slot write position.  Block tables live on the HOST (the
+    scheduler owns admission) and are passed into each jitted call."""
+
+    pools: Any
+    pos: jax.Array            # [B] int32
+
+
+def _iter_meta(layout: PagedLayout):
+    return zip(layout.batch_axes, layout.seq_axes, layout.lengths,
+               layout.leaf_shapes, layout.leaf_dtypes)
+
+
+def init_paged_cache(layout: PagedLayout) -> PagedCache:
+    bs, nb = layout.block_size, layout.num_blocks
+    leaves = []
+    for b_ax, q_ax, L, shape, dtype in _iter_meta(layout):
+        if q_ax is None:
+            leaves.append(jnp.zeros(shape, dtype))
+        else:
+            pool = shape[:b_ax] + (nb, bs) + shape[q_ax + 1:]
+            leaves.append(jnp.zeros(pool, dtype))
+    pools = jax.tree_util.tree_unflatten(layout.treedef, leaves)
+    return PagedCache(pools, jnp.zeros((layout.n_slots,), jnp.int32))
+
+
+def gather_cache(paged: PagedCache, tables: jax.Array,
+                 layout: PagedLayout) -> DecodeCache:
+    """Materialize the dense ``DecodeCache`` view: physical blocks
+    gathered into each slot's logical order.  Sentinel (and any
+    unallocated) entries fill exact zeros — the gathered view is
+    bit-identical to the contiguous cache the slot batcher holds."""
+    bs = layout.block_size
+    out = []
+    for leaf, (b_ax, q_ax, L, shape, _) in zip(
+            jax.tree_util.tree_leaves(paged.pools), _iter_meta(layout)):
+        if q_ax is None:
+            out.append(leaf)
+            continue
+        t = L // bs
+        g = jnp.take(leaf, tables[:, :t], axis=b_ax, mode="fill",
+                     fill_value=0)                  # [.., B, T, bs, ..]
+        out.append(g.reshape(shape[:q_ax] + (L,) + shape[q_ax + 1:]))
+    layers = jax.tree_util.tree_unflatten(layout.treedef, out)
+    return DecodeCache(layers, paged.pos, None)
+
+
+def scatter_decode(paged: PagedCache, dense: DecodeCache, tables: jax.Array,
+                   layout: PagedLayout, start_pos: jax.Array,
+                   k: int) -> PagedCache:
+    """Write back the blocks a K-step decode touched: positions
+    ``[start_pos, start_pos + k)`` per slot (ring leaves wrap modulo
+    their own length).  State leaves are replaced wholesale.  Slots whose
+    table entries are the sentinel (retired / unallocated) scatter with
+    ``mode='drop'`` — their writes vanish."""
+    bs = layout.block_size
+    nt_max = (k - 1) // bs + 2
+    out = []
+    for pool, dleaf, (b_ax, q_ax, L, shape, _) in zip(
+            jax.tree_util.tree_leaves(paged.pools),
+            jax.tree_util.tree_leaves(dense.layers), _iter_meta(layout)):
+        if q_ax is None:
+            out.append(dleaf.astype(pool.dtype))
+            continue
+        t = L // bs
+        nt = min(t, nt_max)
+        lg = (start_pos[:, None] // bs + jnp.arange(nt)[None, :]) % t
+        phys = jnp.take_along_axis(tables[:, :t], lg, axis=1)   # [B, nt]
+        d = jnp.moveaxis(dleaf, (b_ax, q_ax), (0, 1))           # [B, L, ..]
+        d = d.reshape((d.shape[0], t, bs) + d.shape[2:])
+        vals = jnp.take_along_axis(
+            d, lg.reshape(lg.shape + (1,) * (d.ndim - 2)), axis=1)
+        pool_bs = jnp.moveaxis(pool, (b_ax, b_ax + 1), (0, 1))
+        pool_bs = pool_bs.at[phys.reshape(-1)].set(
+            vals.reshape((-1,) + vals.shape[2:]).astype(pool.dtype),
+            mode="drop")
+        out.append(jnp.moveaxis(pool_bs, (0, 1), (b_ax, b_ax + 1)))
+    pools = jax.tree_util.tree_unflatten(layout.treedef, out)
+    return PagedCache(pools, dense.pos)
+
+
+def splice_request(paged: PagedCache, slot: DecodeCache, i,
+                   row_table: jax.Array, layout: PagedLayout) -> PagedCache:
+    """Admission: write a batch-1 prefill cache into slot ``i`` — paged
+    leaves scatter whole blocks through the slot's table row (sentinel
+    entries drop; the working cache is zero there anyway), state leaves
+    splice at the batch axis like ``splice_slot``."""
+    bs = layout.block_size
+    out = []
+    for pool, sleaf, (b_ax, q_ax, L, shape, _) in zip(
+            jax.tree_util.tree_leaves(paged.pools),
+            jax.tree_util.tree_leaves(slot.layers), _iter_meta(layout)):
+        if q_ax is None:
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                pool, sleaf.astype(pool.dtype), i, axis=b_ax))
+            continue
+        t = L // bs
+        d = jnp.moveaxis(sleaf, (b_ax, q_ax), (0, 1))[0]        # [L, ..]
+        vals = d.reshape((t, bs) + d.shape[1:])
+        pool_bs = jnp.moveaxis(pool, (b_ax, b_ax + 1), (0, 1))
+        pool_bs = pool_bs.at[row_table[:t]].set(
+            vals.astype(pool.dtype), mode="drop")
+        out.append(jnp.moveaxis(pool_bs, (0, 1), (b_ax, b_ax + 1)))
+    pools = jax.tree_util.tree_unflatten(layout.treedef, out)
+    pos = paged.pos.at[i].set(slot.pos[0].astype(paged.pos.dtype))
+    return PagedCache(pools, pos)
+
+
+# ------------------------------------------------------------------ mesh
+
+def paged_cache_specs(paged_shapes: PagedCache, layout: PagedLayout, mesh,
+                      policy=None):
+    """NamedSharding tree for a :class:`PagedCache` under a serving mesh.
+
+    Pool leaves have no batch dim; the block and block-offset dims are
+    the paging address space and stay replicated — "model" goes on the
+    largest divisible remaining dim (heads/latent), mirroring
+    ``distributed.sharding.cache_specs`` so a gathered dense view lines
+    up with the slot batcher's sharded cache.  State leaves use the
+    cache rule directly (batch = ``n_slots``)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    msize = shd.axis_size(mesh, ("model",))
+
+    def pool_spec(shape, reserved):
+        cand = [i for i, d in enumerate(shape)
+                if i not in reserved and d % msize == 0 and d >= msize > 1]
+        mdim = max(cand, key=lambda i: shape[i]) if cand else -1
+        spec = ["model" if i == mdim else None for i in range(len(shape))]
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    out = []
+    for leaf, (b_ax, q_ax, L, shape, _) in zip(
+            jax.tree_util.tree_leaves(paged_shapes.pools),
+            _iter_meta(layout)):
+        if q_ax is None:
+            out.append(jax.tree_util.tree_leaves(shd.cache_specs(
+                leaf, mesh, layout.n_slots, policy))[0])
+        else:
+            out.append(pool_spec(leaf.shape, {b_ax, b_ax + 1}))
+    pools = jax.tree_util.tree_unflatten(layout.treedef, out)
+    return PagedCache(pools, NamedSharding(mesh, P()))
+
+
+def required_blocks(n_positions: int, layout: PagedLayout) -> int:
+    """Table entries needed to cover ``n_positions`` written positions
+    (capped at the table width — ring wrap reuses early entries)."""
+    return min(layout.table_width,
+               -(-int(n_positions) // layout.block_size))
+
+
+def host_table_row(layout: PagedLayout, blocks: list[int]) -> np.ndarray:
+    row = np.full((layout.table_width,), layout.sentinel, np.int32)
+    row[:len(blocks)] = blocks
+    return row
