@@ -183,6 +183,70 @@ def run_poisson_traffic(json_path: str = "BENCH_traffic.json",
     return results
 
 
+def run_plane_skip(backends=("bpbs", "pallas"),
+                   sparsities=(0.0, 0.5, 0.9),
+                   n: int = 2304, m: int = 256, batch: int = 4,
+                   bank_n: int = 128, reps: int = 5) -> dict:
+    """Fig. 6b sparsity controller: wall time of the BP/BS matmul with the
+    zero-plane skip on vs off, at contiguous block-feature input sparsity
+    (the first ``s*n`` features zero across the whole batch — pruned
+    channels / padded features).  Scattered random sparsity almost never
+    zeroes a whole (bank, serial-plane) pair at realistic bank sizes, so
+    block sparsity is what the controller's per-bank tally actually
+    converts into skipped broadcasts (DESIGN.md §12).
+
+    Modes are timed interleaved (min-of-reps per mode) to cancel ordering
+    bias.  Returns per backend/sparsity: ms skip-on/off, speedup, and the
+    measured fraction of (bank, plane) pairs skipped.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.core.quant import quantize
+    from repro.core.sparsity import count_zero_planes
+
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    out: dict = {"n": n, "m": m, "batch": batch, "bank_n": bank_n,
+                 "backends": {}}
+    for backend in backends:
+        spec0 = accel.ExecSpec(backend=backend, ba=4, bx=4, bank_n=bank_n)
+        rows = []
+        for s in sparsities:
+            x = rng.normal(size=(batch, n)).astype(np.float32)
+            x[:, :int(round(s * n))] = 0.0           # block-feature zeros
+            x = jnp.asarray(x)
+            qx = quantize(x, spec0.bx, spec0.coding)
+            skipped, total = count_zero_planes(qx.q, spec0.bpbs())
+            fns = {}
+            for skip in (True, False):
+                spec = dataclasses.replace(spec0, skip_zero_planes=skip)
+                f = jax.jit(lambda x, spec=spec: accel.matmul(x, w, spec))
+                jax.block_until_ready(f(x))          # compile + warm
+                fns[skip] = f
+            best = {True: float("inf"), False: float("inf")}
+            for rep in range(reps):
+                order = (True, False) if rep % 2 == 0 else (False, True)
+                for skip in order:                   # interleaved reps
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fns[skip](x))
+                    best[skip] = min(best[skip],
+                                     (time.perf_counter() - t0) * 1e3)
+            row = {"sparsity": s, "ms_skip_on": best[True],
+                   "ms_skip_off": best[False],
+                   "speedup": best[False] / max(best[True], 1e-9),
+                   "planes_skipped_frac": skipped / total}
+            rows.append(row)
+            emit(f"plane_skip_{backend}_s{int(s * 100):02d}",
+                 best[True] * 1e3,
+                 f"off_ms={best[False]:.2f};on_ms={best[True]:.2f};"
+                 f"speedup={row['speedup']:.2f}x;"
+                 f"skipped={row['planes_skipped_frac']:.2f}")
+        out["backends"][backend] = rows
+    return out
+
+
 def run_decode_cached(json_path: str = "BENCH_decode.json",
                       backends=("digital_int", "bpbs"),
                       batch: int = 4, steps: int = 8,
@@ -193,7 +257,11 @@ def run_decode_cached(json_path: str = "BENCH_decode.json",
 
     Emits CSV rows and writes a machine-readable JSON: per backend
     ``ms_per_step_cached`` / ``ms_per_step_uncached`` / ``speedup`` plus
-    ``tokens_per_step`` (= batch: one token per slot per step).
+    ``tokens_per_step`` (= batch: one token per slot per step), and the
+    ``plane_skip`` section from :func:`run_plane_skip` (zero-plane skip
+    speedup at input sparsity 0/0.5/0.9 on the bpbs and pallas backends)
+    so the fast-CI artifact carries both.  Asserts a measured skip
+    speedup at >=50% block sparsity AFTER writing the artifact.
     """
     import dataclasses
 
@@ -207,7 +275,8 @@ def run_decode_cached(json_path: str = "BENCH_decode.json",
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(rng.integers(1, cfg0.vocab, (batch, prompt_len)),
                           jnp.int32)
-    scfg = ServeConfig(max_seq=prompt_len + steps + 4, max_new_tokens=steps)
+    need = prompt_len + steps + 4                  # round up to kv blocks
+    scfg = ServeConfig(max_seq=-(-need // 16) * 16, max_new_tokens=steps)
     results: dict = {"model": "olmo-1b.reduced", "tokens_per_step": batch,
                      "decode_steps_timed": steps, "backends": {}}
     for backend in backends:
@@ -238,9 +307,18 @@ def run_decode_cached(json_path: str = "BENCH_decode.json",
              f"uncached_ms={row['ms_per_step_uncached']:.2f};"
              f"cached_ms={row['ms_per_step_cached']:.2f};"
              f"speedup={row['speedup']:.2f}x;tokens_per_step={batch}")
+    results["plane_skip"] = run_plane_skip()
+    # write the artifact BEFORE asserting so a regression still uploads
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2)
+    for backend, rows in results["plane_skip"]["backends"].items():
+        for row in rows:
+            if row["sparsity"] >= 0.5:
+                assert row["speedup"] > 1.0, (
+                    f"{backend}: zero-plane skip must beat the dense path "
+                    f"at {row['sparsity']:.0%} block sparsity, got "
+                    f"{row['speedup']:.2f}x")
     return results
 
 
@@ -273,8 +351,9 @@ def run_fused_decode(json_path: str = "BENCH_fused.json",
     prompts = jnp.asarray(rng.integers(1, cfg0.vocab, (batch, prompt_len)),
                           jnp.int32)
     # cache must hold every decode step across all interleaved reps
-    scfg = ServeConfig(max_seq=prompt_len + steps * (reps + 1) + 8,
-                       max_new_tokens=steps)
+    # (rounded up to whole kv blocks)
+    need = prompt_len + steps * (reps + 1) + 8
+    scfg = ServeConfig(max_seq=-(-need // 16) * 16, max_new_tokens=steps)
     results: dict = {"model": "olmo-1b.reduced", "tokens_per_step": batch,
                      "decode_steps_timed": steps, "backends": {}}
     for backend in backends:

@@ -54,7 +54,7 @@ Quick start::
 from repro.core.datapath import Postreduce, fold_batchnorm
 
 from .context import (ExecContext, MvmRecord, adc_noise, energy_summary,
-                      override, trace, vmapped)
+                      override, pad_positions, trace, vmapped)
 from .dispatch import matmul
 from .policy import DIGITAL, PrecisionPolicy
 from .program import (CimaImage, CimaProgram, ProgramManager, build_program,
@@ -67,7 +67,8 @@ from . import backends as _backends  # noqa: F401  (registers built-ins)
 __all__ = [
     "ExecSpec", "PrecisionPolicy", "DIGITAL", "ExecContext", "MvmRecord",
     "Postreduce", "fold_batchnorm",
-    "matmul", "override", "trace", "vmapped", "adc_noise", "energy_summary",
+    "matmul", "override", "trace", "vmapped", "adc_noise", "pad_positions",
+    "energy_summary",
     "register_backend", "get_backend", "list_backends",
     "CimaImage", "CimaProgram", "ProgramManager", "build_program",
     "install_program", "strip_program",

@@ -35,10 +35,15 @@ def quantize_input(x: jax.Array, spec: ExecSpec) -> QTensor:
     The paper's C_x discipline at TP scale: any cross-device regather of
     the activations happens on the quantized int8 values (B_X bits on the
     chip's DMA), not on f32 planes — 16x fewer bytes (§Perf cell c).
+
+    ``spec.x_per_row`` switches to one scale per input row (the
+    per-vector DAC range): ``qx.scale`` is then ``x.shape[:-1] + (1,)``
+    and every downstream rescale broadcasts it — the batch-decoupling
+    discipline serving defaults to.
     """
     from repro.distributed.autoshard import cs
 
-    qx = quantize(x, spec.bx, spec.coding)
+    qx = quantize(x, spec.bx, spec.coding, per_row=spec.x_per_row)
     q_int = cs(qx.q.astype(jnp.int8), ("dp",))
     return dataclasses.replace(qx, q=q_int)
 

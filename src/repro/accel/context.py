@@ -122,8 +122,19 @@ class MvmRecord:
     # the AND-logic controller gates off.  Only measurable when the
     # dispatch sees CONCRETE inputs (an eager call under trace()); a
     # jitted trace records None and energy_summary falls back to its
-    # uniform ``sparsity`` argument.
+    # uniform ``sparsity`` argument.  Positions marked pad by an ambient
+    # ``pad_positions`` scope are excluded — left-pad zeros are not
+    # exploitable sparsity.
     sparsity: Optional[float] = None
+    # measured plane-level skips (repro.core.sparsity.count_zero_planes):
+    # all-zero (bank, input-plane) serial steps the controller skips
+    # outright, out of ``planes_total = n_banks * bx`` at the spec's
+    # banking.  Same eager-only caveat as ``sparsity``; energy_summary
+    # discounts cycles and per-conversion pJ by the measured fraction —
+    # the hot path's savings estimate comes from these, not the uniform
+    # ``sparsity`` argument.
+    planes_skipped: Optional[int] = None
+    planes_total: Optional[int] = None
 
 
 _TRACE_STACK: list[list] = []
@@ -204,6 +215,40 @@ def tracing() -> bool:
     return bool(_TRACE_STACK)
 
 
+# ------------------------------------------------------------ pad positions
+
+_PAD_STACK: list = []
+
+
+@contextlib.contextmanager
+def pad_positions(mask) -> Iterator[None]:
+    """Mark which leading positions of the activations are PADDING.
+
+    ``mask`` is boolean (True = real token), shaped like the activations'
+    leading dims (e.g. ``[B, S]`` for a padded prefill).  Measured-
+    sparsity/plane-skip accounting excludes masked-out positions: left-pad
+    zeros look exactly like exploitable input sparsity to the dispatcher,
+    but the controller never saves real work on tokens that don't exist —
+    counting them overstates the savings.
+
+    Eager-only like the measurement itself: inside a jit trace the
+    activations are Tracers and nothing is measured anyway, so a Tracer
+    mask is simply ignored.  A mask whose shape doesn't prefix-match the
+    activation being measured is ignored too (e.g. the single-token
+    unembed slice of a padded prefill).
+    """
+    _PAD_STACK.append(mask)
+    try:
+        yield
+    finally:
+        _PAD_STACK.pop()
+
+
+def current_pad_mask():
+    """The innermost ambient pad mask (None outside any scope)."""
+    return _PAD_STACK[-1] if _PAD_STACK else None
+
+
 def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
                    readout: str = "adc") -> dict:
     """Chip-model cost of a traced run, from :mod:`repro.core.energy`.
@@ -213,6 +258,15 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     see the field) uses that instead, and the calls-weighted mean of the
     measured values is surfaced as ``input_sparsity`` (None when nothing
     was measured).
+
+    Records carrying measured ``planes_skipped``/``planes_total``
+    additionally discount CIMU cycles and every per-conversion pJ term by
+    the skipped-plane fraction (the Fig. 6b controller skips all-zero
+    (bank, input-plane) serial steps outright — see
+    ``BpbsConfig.skip_zero_planes``); the calls-weighted mean fraction is
+    surfaced as ``plane_skip`` (None when nothing was measured).  This is
+    the measured hot-path savings — the uniform ``sparsity`` argument
+    only gates broadcast energy of the surviving conversions.
 
     Digital records are counted (``mvms``) but carry no accelerator
     energy — they never touched the CIMU.  Dispatches whose weight image
@@ -259,6 +313,8 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     post_pj = 0.0
     sp_weight = 0
     sp_sum = 0.0
+    skip_weight = 0
+    skip_sum = 0.0
     for r in records:
         row = by_tag.setdefault(
             r.tag or r.backend,
@@ -275,11 +331,17 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
         if r_sp is not None:
             sp_sum += r_sp * r.calls
             sp_weight += r.calls
+        skip = 0.0
+        if getattr(r, "planes_skipped", None) is not None \
+                and getattr(r, "planes_total", None):
+            skip = r.planes_skipped / r.planes_total
+            skip_sum += skip * r.calls
+            skip_weight += r.calls
         pj = E.mvm_energy_pj(shape, vdd,
                              sparsity if r_sp is None else r_sp,
-                             readout)["total"] \
+                             readout, plane_skip=skip)["total"] \
             * r.calls * d_sh
-        cyc = E.mvm_cycles(shape, readout) * r.calls
+        cyc = E.mvm_cycles(shape, readout, plane_skip=skip) * r.calls
         if r.loads:
             segs = r.loads * r.load_segments       # per-device segments
             lc = segs * seg_cycles                 # per-device wall cycles
@@ -302,4 +364,5 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
             "load_pj": load_pj, "load_cycles": load_cycles,
             "post_pj": post_pj,
             "input_sparsity": (sp_sum / sp_weight if sp_weight else None),
+            "plane_skip": (skip_sum / skip_weight if skip_weight else None),
             "by_tag": by_tag}

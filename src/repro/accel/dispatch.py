@@ -30,9 +30,24 @@ import jax
 import jax.numpy as jnp
 
 from .context import (ExecContext, MvmRecord, current_override,
-                      next_noise_key, record, tracing)
+                      current_pad_mask, next_noise_key, record, tracing)
 from .registry import get_backend
 from .spec import ExecSpec
+
+
+def _strip_pad(x: jax.Array) -> jax.Array:
+    """Drop positions an ambient :func:`~repro.accel.context.pad_positions`
+    scope marks as padding before measuring sparsity: left-pad zeros are
+    not exploitable — the controller saves nothing on tokens that don't
+    exist.  Eager-only (a Tracer mask is ignored, matching the
+    measurement's own eager-only contract); a mask whose shape doesn't
+    prefix-match ``x`` is ignored (e.g. the unembed's last-token slice)."""
+    mask = current_pad_mask()
+    if mask is None or isinstance(mask, jax.core.Tracer):
+        return x
+    if mask.ndim >= x.ndim or x.shape[:mask.ndim] != mask.shape:
+        return x
+    return x[jnp.asarray(mask, bool)]     # [n_real, ...trailing]
 
 
 def _measured_sparsity(spec: ExecSpec, x: jax.Array) -> Optional[float]:
@@ -47,8 +62,27 @@ def _measured_sparsity(spec: ExecSpec, x: jax.Array) -> Optional[float]:
     from repro.core.quant import quantize
     from repro.core.sparsity import element_mask, sparsity_fraction
 
-    qx = quantize(x, spec.bx, spec.coding)
+    qx = quantize(_strip_pad(x), spec.bx, spec.coding,
+                  per_row=spec.x_per_row)
     return float(sparsity_fraction(element_mask(qx.q)))
+
+
+def _measured_planes(spec: ExecSpec, x: jax.Array) \
+        -> tuple[Optional[int], Optional[int]]:
+    """``(planes_skipped, planes_total)``: all-zero (bank, input-plane)
+    serial steps the plane-skip fast path gates off for this dispatch
+    (repro.core.sparsity.count_zero_planes), at the spec's banking.
+    Eager-only, like :func:`_measured_sparsity`.  Pad positions are NOT
+    stripped here: the skip predicate in the execution path sees the
+    padded batch, so the measurement must match what actually skips."""
+    if spec.backend == "digital" or not spec.skip_zero_planes \
+            or isinstance(x, jax.core.Tracer):
+        return None, None
+    from repro.core.quant import quantize
+    from repro.core.sparsity import count_zero_planes
+
+    qx = quantize(x, spec.bx, spec.coding, per_row=spec.x_per_row)
+    return count_zero_planes(qx.q, spec.bpbs())
 
 
 def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
@@ -56,6 +90,7 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
     if not tracing():
         return
     streamed = image is not None and not image.resident
+    skipped, total = _measured_planes(spec, x)
     # devices/partition come from the image's COMPILED layout: the trace
     # is the chip cost model, and a program built for an N-chip mesh
     # describes an N-chip system whether or not the host run actually
@@ -74,6 +109,8 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
         partition=(image.partition or "") if image is not None else "",
         post_ops=post.n_ops() if post is not None else 0,
         sparsity=_measured_sparsity(spec, x),
+        planes_skipped=skipped,
+        planes_total=total,
     ))
 
 

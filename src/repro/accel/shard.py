@@ -18,11 +18,13 @@ program per chip (DESIGN.md §9):
   column sums — exactly the physical multi-chip behaviour), and the
   digital partial sums are combined with a single ``psum`` all-reduce.
 
-Input quantization is GLOBAL (outside ``shard_map``): the dynamic
-per-tensor input scale must be computed from the full activation, exactly
-as the single-chip path does — sharding must never change the operand
-grid.  Likewise the final ``rescale`` runs on the combined integer
-result with the image's (global) weight scales.
+Input quantization is GLOBAL (outside ``shard_map``): the dynamic input
+scale — per-tensor, or per-row under ``spec.x_per_row`` — must be
+computed from the full activation, exactly as the single-chip path does —
+sharding must never change the operand grid.  Likewise the final
+``rescale`` runs on the combined integer result with the image's (global)
+weight scales; a per-row ``qx.scale`` (last dim 1) rides into the body
+replicated and broadcasts against the local tile.
 
 The Pallas ``cima_mvm`` kernel composes directly: inside the body it sees
 the local ``[N_loc, BA, M_loc]`` planes, so its bank grid dimension *is*

@@ -42,6 +42,17 @@ class ExecSpec:
     adaptive_range: bool = False   # ADC full-scale tracks unmasked rows
     ideal_adc: bool = False        # bypass the ADC (bit-true integer compute)
     per_channel: bool = True       # per-output-column weight scales
+    # Batch-decoupled input quantization: one scale per input ROW (what a
+    # real per-vector input DAC sees) instead of one per-tensor amax over
+    # the whole batch.  With it, a request's quantized values — and hence
+    # its token stream — never depend on which other requests share the
+    # batch; serving turns this on by default (ServeConfig.x_per_row).
+    x_per_row: bool = False
+    # Sparsity-controller plane skip (paper Fig. 6b): gate the GEMM of
+    # all-zero (bank, input-plane) serial steps in the bpbs/pallas paths.
+    # Bit-identical output by construction; cycles/pJ savings are charged
+    # via MvmRecord.planes_skipped.
+    skip_zero_planes: bool = True
     interpret: Optional[bool] = None  # pallas interpret mode (None = auto)
     tag: str = ""                  # provenance: the path a policy resolved
 
@@ -83,6 +94,7 @@ class ExecSpec:
             adc_sigma_lsb=self.adc_sigma_lsb,
             adaptive_range=self.adaptive_range,
             ideal_adc=self.ideal_adc,
+            skip_zero_planes=self.skip_zero_planes,
         )
 
     def with_(self, **kw) -> "ExecSpec":

@@ -20,14 +20,37 @@ functions bound it to a fraction of an LSB, so the default is 0.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+# Modeled residual analog non-ideality per VDD corner, in ADC LSB units.
+# Fig. 10's measured column transfer functions bound the deviation to a
+# fraction of an LSB; the 0.85 V corner (297 1b-TOPS/W) runs the charge
+# share and SAR comparator at reduced headroom, so we model it noisier.
+# These are the sigmas the calibration / noise-aware-QAT recipe
+# (repro.optim.qat) and the accuracy-under-noise regression test use.
+SIGMA_LSB_CORNER = {1.2: 0.15, 0.85: 0.3}
+
 
 def adc_codes(adc_bits: int = 8) -> int:
     return 2 ** adc_bits
+
+
+def _warn_keyless_noise(sigma_lsb: float, where: str) -> None:
+    """A spec requested noise (``sigma_lsb > 0``) but no PRNG key reached
+    the conversion — historically this *silently* ran noiseless, which
+    made robustness studies trivially (and wrongly) pass.  Warn loudly;
+    the fix is an ``accel.adc_noise(key)`` scope around the tracing call
+    (or ``ideal_adc``/``sigma_lsb=0`` if noiseless is intended)."""
+    warnings.warn(
+        f"{where}: adc_sigma_lsb={sigma_lsb} requested but no noise key is "
+        "in scope — running NOISELESS. Wrap the (tracing) call in "
+        "`with repro.accel.adc_noise(jax.random.PRNGKey(...)):` to sample "
+        "the analog non-ideality, or set adc_sigma_lsb=0 to silence this.",
+        RuntimeWarning, stacklevel=3)
 
 
 def adc_convert(
@@ -41,8 +64,12 @@ def adc_convert(
     cmax = float(adc_codes(adc_bits) - 1)
     fs = jnp.maximum(jnp.asarray(full_scale, dtype=jnp.float32), 1.0)
     x = jnp.clip(p.astype(jnp.float32), 0.0, fs) * (cmax / fs)
-    if sigma_lsb and key is not None:
-        x = x + sigma_lsb * jax.random.normal(key, x.shape, dtype=jnp.float32)
+    if sigma_lsb:
+        if key is not None:
+            x = x + sigma_lsb * jax.random.normal(key, x.shape,
+                                                  dtype=jnp.float32)
+        else:
+            _warn_keyless_noise(sigma_lsb, "adc_convert")
     return jnp.clip(jnp.round(x), 0.0, cmax)
 
 
@@ -87,10 +114,13 @@ def abn_binarize(
     fs = jnp.maximum(jnp.asarray(full_scale, dtype=jnp.float32), 1.0)
     thresh = jnp.asarray(threshold_code, dtype=jnp.float32) * (fs / dmax)
     x = p.astype(jnp.float32)
-    if sigma_lsb and key is not None:
-        x = x + sigma_lsb * (fs / 255.0) * jax.random.normal(
-            key, x.shape, dtype=jnp.float32
-        )
+    if sigma_lsb:
+        if key is not None:
+            x = x + sigma_lsb * (fs / 255.0) * jax.random.normal(
+                key, x.shape, dtype=jnp.float32
+            )
+        else:
+            _warn_keyless_noise(sigma_lsb, "abn_binarize")
     return jnp.where(x >= thresh, 1.0, -1.0)
 
 

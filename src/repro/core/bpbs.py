@@ -46,6 +46,12 @@ class BpbsConfig:
     adc_sigma_lsb: float = 0.0     # analog non-ideality (Fig 10), LSB units
     adaptive_range: bool = False   # ADC full-scale tracks unmasked rows
     ideal_adc: bool = False        # bypass the ADC (bit-true integer compute)
+    # Sparsity-controller plane skip (Fig. 6b): gate the GEMM of any
+    # (bank, kx) input bit plane that is all-zero across the batch.  BS
+    # cost is linear in B_X, so each skipped plane is a saved serial step.
+    # Bit-identical to the dense path by construction: only the plane dot
+    # product (provably zero) is skipped — the ADC epilogue still runs.
+    skip_zero_planes: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "coding", Coding(self.coding))
@@ -167,14 +173,34 @@ def bpbs_matmul_planes(
         for dim in lead:
             t *= dim
         nb = e - s
-        x2 = jnp.swapaxes(xb, -1, -2).reshape(t * cfg.bx, nb)
         w2 = wb.reshape(nb, cfg.ba * m)
         # gather the (tiny, bf16) weight planes over the FSDP axis up front:
         # left to itself the partitioner all-reduces the full f32
         # [T*BX, BA*M] partial products over "data" — 4.3 GB vs the 33 MB
         # plane gather (§Perf cell c, iterations 1-2)
         w2 = cs(w2, (None, ["tp"]))
-        d2 = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
+        x2 = jnp.swapaxes(xb, -1, -2).reshape(t * cfg.bx, nb)
+        if cfg.skip_zero_planes:
+            # Sparsity-controller skip (Fig. 6b): gate the bank's GEMM on
+            # whether ANY of its input planes broadcasts a live bit.  A
+            # skipped bank's dot products are exactly zero, so feeding the
+            # zeros into the UNCHANGED epilogue below keeps the result
+            # bit-identical to the dense path for every coding/precision/
+            # noise setting (plane products are exact in f32).  The gate is
+            # whole-bank here — splitting the fused [T*BX, nb] GEMM into
+            # per-plane dots costs XLA-CPU ~1.7x on DENSE inputs, wiping
+            # out the very savings being modeled — while the cost model
+            # accounts skips per (bank, plane) serial step
+            # (core.sparsity.count_zero_planes), and the Pallas kernel,
+            # whose loop is already per serial step, gates per plane.
+            d2 = jax.lax.cond(
+                jnp.any(x2 != 0),
+                lambda a: jnp.dot(a, w2, preferred_element_type=jnp.float32),
+                lambda a: jnp.zeros((t * cfg.bx, cfg.ba * m), jnp.float32),
+                x2,
+            )
+        else:
+            d2 = jnp.dot(x2, w2, preferred_element_type=jnp.float32)
         d = d2.reshape(*lead, cfg.bx, cfg.ba, m)
         subkey = None
         if key is not None:

@@ -100,16 +100,27 @@ def mvm_energy_pj(
     sparsity: float = 0.0,
     readout: str = "adc",
     input_reuse: float = 1.0,
+    plane_skip: float = 0.0,
 ) -> dict:
     """Energy breakdown (pJ) of one MVM through the CIMU.
 
     ``input_reuse`` models the Reshaping Buffer's CNN striding reuse: only
     ``1/input_reuse`` of input words are newly loaded (paper Fig. 6a).
+
+    ``plane_skip`` is the fraction of (bank, input-plane) serial steps the
+    Sparsity Controller skipped outright (all-zero planes, Fig. 6b): a
+    skipped step fires no conversions at all, so every per-conversion
+    term (charge share, readout, datapath) scales by ``1 - plane_skip``.
+    Element-level ``sparsity`` still gates the broadcast share of the
+    *surviving* conversions — the two discounts compose.  Input DMA/
+    reshape words are NOT discounted: the controller derives the mask
+    after the words arrive.
     """
     e = ENERGY_PJ[vdd]
     rows_frac = min(shape.n, CIMA_ROWS * shape.n_banks) / (CIMA_ROWS * shape.n_banks)
     # per-column-conversion counts: every (bank, bit-column, bit-step)
-    conversions = shape.n_banks * shape.m * shape.ba * shape.bx
+    conversions = shape.n_banks * shape.m * shape.ba * shape.bx \
+        * (1.0 - plane_skip)
     cima = conversions * e["cima_col"] * rows_frac * (
         1.0 - CIMA_SPARSITY_GATEABLE * sparsity
     )
@@ -128,10 +139,17 @@ def mvm_energy_pj(
                 reshape=reshape, dma=dma, total=total)
 
 
-def mvm_cycles(shape: MvmShape, readout: str = "adc") -> int:
-    """CIMU compute cycles C_CIMU for one MVM."""
+def mvm_cycles(shape: MvmShape, readout: str = "adc",
+               plane_skip: float = 0.0) -> int:
+    """CIMU compute cycles C_CIMU for one MVM.
+
+    BS cost is linear in B_X (the ``* shape.bx`` factor), so a skipped
+    all-zero (bank, plane) serial step is directly saved cycles —
+    ``plane_skip`` (fraction of steps skipped) discounts the total.
+    """
     per_eval = CYCLES_PER_EVAL_ABN if readout == "abn" else CYCLES_PER_EVAL_ADC
-    return shape.evals * per_eval * shape.bx
+    return int(round(shape.evals * per_eval * shape.bx
+                     * (1.0 - plane_skip)))
 
 
 def transfer_cycles(shape: MvmShape, readout: str = "adc") -> tuple[int, int]:

@@ -93,25 +93,36 @@ def quantize(
     coding: Coding,
     axis: Optional[int] = None,
     eps: float = 1e-12,
+    per_row: bool = False,
 ) -> QTensor:
-    """Symmetric (per-tensor or per-axis) quantization onto the coding grid."""
+    """Symmetric (per-tensor, per-axis, or per-row) quantization onto the
+    coding grid.
+
+    ``per_row=True`` reduces over the LAST axis only, keeping independent
+    scales for every leading index (shape ``x.shape[:-1] + (1,)``) — the
+    per-vector range a real input DAC sees.  Each row's grid then depends
+    only on that row, so batch composition cannot change any element's
+    quantized value (the batch-decoupling property serving relies on).
+    Mutually exclusive with ``axis``.
+    """
     coding = Coding(coding)
-    if axis is None:
-        amax = jnp.max(jnp.abs(x))
-    else:
+    if per_row and axis is not None:
+        raise ValueError("quantize: per_row and axis are mutually exclusive")
+
+    def _reduce(fn):
+        if per_row:
+            return fn(jnp.abs(x), axis=-1, keepdims=True)
+        if axis is None:
+            return fn(jnp.abs(x))
         reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
-        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
-    amax = jnp.maximum(amax, eps)
+        return fn(jnp.abs(x), axis=reduce_axes, keepdims=True)
+
+    amax = jnp.maximum(_reduce(jnp.max), eps)
 
     if coding == Coding.XNOR:
         if bits == 1:
             # BNN-style: q in {-1, +1}; scale = E|x| preserves magnitude.
-            if axis is None:
-                scale = jnp.mean(jnp.abs(x))
-            else:
-                reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
-                scale = jnp.mean(jnp.abs(x), axis=reduce_axes, keepdims=True)
-            scale = jnp.maximum(scale, eps)
+            scale = jnp.maximum(_reduce(jnp.mean), eps)
             q = jnp.where(x >= 0, 1.0, -1.0)
             return QTensor(q, scale, bits, coding)
         half = 2.0 ** (bits - 2)          # max level index

@@ -40,3 +40,32 @@ def masked_tally(mask: jax.Array, axis: int = -1) -> jax.Array:
 def sparsity_fraction(mask: jax.Array) -> jax.Array:
     """Fraction of zero-valued elements (drives the energy model)."""
     return 1.0 - jnp.mean(mask)
+
+
+def count_zero_planes(x_q: jax.Array, cfg) -> tuple[int, int]:
+    """``(skipped, total)`` all-zero (bank, input-plane) evaluations.
+
+    The controller's plane-level view of Fig. 6b: a (bank, kx) pair whose
+    masked input bit plane is all-zero *across the whole batch* broadcasts
+    nothing — the BP/BS serial step for that bank is a no-op the chip can
+    skip entirely (``cyc`` and conversions saved, not just broadcast
+    energy).  This is the quantity :func:`repro.core.bpbs.
+    bpbs_matmul_planes` gates its per-plane GEMMs on and what
+    ``MvmRecord.planes_skipped`` charges in the cost model.
+
+    ``cfg`` is a :class:`~repro.core.bpbs.BpbsConfig`; requires concrete
+    (non-Tracer) values.
+    """
+    from .bpbs import input_planes
+
+    planes, _ = input_planes(x_q, cfg)            # [..., N, BX]
+    n = x_q.shape[-1]
+    n_banks = -(-n // cfg.bank_n)
+    batch_axes = tuple(range(planes.ndim - 2))
+    skipped = 0
+    for b in range(n_banks):
+        s, e = b * cfg.bank_n, min((b + 1) * cfg.bank_n, n)
+        nz = jnp.any(planes[..., s:e, :] != 0,
+                     axis=batch_axes + (planes.ndim - 2,))   # [BX]
+        skipped += int(jnp.sum(~nz))
+    return skipped, n_banks * cfg.bx

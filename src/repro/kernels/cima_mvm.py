@@ -64,18 +64,39 @@ def _kernel(
 
     acc = jnp.zeros(out_ref.shape, dtype=jnp.float32)
     for kx in range(cfg.bx):
-        x = xs_ref[:, kx, :].astype(jnp.bfloat16)     # [bb, bank_n]
+        xk = xs_ref[:, kx, :]                         # [bb, bank_n] int8
+
+        def _gemms(xk):
+            x = xk.astype(jnp.bfloat16)
+            # mixed-signal column evaluations: one MXU pass per plane pair
+            return tuple(
+                jax.lax.dot_general(
+                    x, ws_ref[:, ka, :].astype(jnp.bfloat16),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+                for ka in range(cfg.ba))
+
+        if cfg.skip_zero_planes:
+            # Sparsity-controller plane skip (Fig. 6b): an all-zero input
+            # bit plane broadcasts nothing, so the serial step's MXU
+            # passes are gated off at runtime.  Only the (provably zero)
+            # dot products are skipped; the ADC epilogue below still runs
+            # on the zeros, keeping the output bit-identical to the dense
+            # path for every coding/precision.
+            ds = jax.lax.cond(
+                jnp.any(xk != 0), _gemms,
+                lambda _: tuple(jnp.zeros(out_ref.shape, jnp.float32)
+                                for _ in range(cfg.ba)),
+                xk)
+        else:
+            ds = _gemms(xk)
         for ka in range(cfg.ba):
-            w = ws_ref[:, ka, :].astype(jnp.bfloat16)  # [bank_n, bm]
-            # mixed-signal column evaluation: one MXU pass per plane pair
-            d = jax.lax.dot_general(
-                x, w, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32,
-            )
             # popcount recovery + SAR ADC transfer + signed-dot recovery:
             # the same epilogue definition the fast path evaluates (no
-            # noise draw in-kernel: key=None skips it, as before)
-            d_hat = gemm_adc_epilogue(d, nu, fs_static, cfg)
+            # noise draw in-kernel: key=None — at adc_sigma_lsb > 0 this
+            # warns that the kernel path runs noiseless)
+            d_hat = gemm_adc_epilogue(ds[ka], nu, fs_static, cfg)
             # near-memory datapath: barrel shift + accumulate (time & space)
             acc = acc + (wx[kx] * wa[ka]) * d_hat
     out_ref[...] += acc
@@ -124,7 +145,7 @@ def cima_mvm_planes(
     block_b: int = 128,
     block_m: int = 128,
     interpret: bool = True,
-    escale: Optional[jax.Array] = None,   # [M]|scalar: rescale*post-scale
+    escale: Optional[jax.Array] = None,   # [M]|[B,M]|scalar: rescale*scale
     pbias: Optional[jax.Array] = None,    # [M]|scalar: datapath bias regs
     act: Optional[str] = None,
     by_bits: Optional[int] = None,
@@ -161,13 +182,30 @@ def cima_mvm_planes(
     ]
     if fused:
         def col_vec(v, fill):
-            v = jnp.full((m,), fill, jnp.float32) if v is None else \
-                jnp.broadcast_to(jnp.asarray(v, jnp.float32).reshape(-1),
-                                 (m,))
-            return _pad_to(v.reshape(1, m), 1, block_m)
+            if v is None:
+                v = jnp.full((1, m), fill, jnp.float32)
+            else:
+                v = jnp.asarray(v, jnp.float32)
+                if v.ndim >= 2:
+                    # per-ROW operand (batch-decoupled input scales folded
+                    # into the datapath registers): one row of scale
+                    # registers per batch row, blocked like the output
+                    v = v.reshape(-1, v.shape[-1])
+                    v = jnp.broadcast_to(v, (v.shape[0], m))
+                else:
+                    v = jnp.broadcast_to(v.reshape(-1), (m,)).reshape(1, m)
+            v = _pad_to(v, 1, block_m)
+            return _pad_to(v, 0, block_b) if v.shape[0] > 1 else v
 
-        operands += [col_vec(escale, 1.0), col_vec(pbias, 0.0)]
-        in_specs += [pl.BlockSpec((1, block_m), lambda i, j, k: (0, j))] * 2
+        def vec_spec(v):
+            if v.shape[0] > 1:
+                return pl.BlockSpec((block_b, block_m),
+                                    lambda i, j, k: (i, j))
+            return pl.BlockSpec((1, block_m), lambda i, j, k: (0, j))
+
+        es, pb = col_vec(escale, 1.0), col_vec(pbias, 0.0)
+        operands += [es, pb]
+        in_specs += [vec_spec(es), vec_spec(pb)]
 
     grid = (bp // block_b, mp // block_m, n_banks)
     out = pl.pallas_call(

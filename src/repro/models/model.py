@@ -240,28 +240,37 @@ def prefill(params, tokens, cfg, s_max: Optional[int] = None,
         pos_out = jnp.full((b,), s, jnp.int32)
     cache = init_cache(cfg, b, s_max)
 
-    if cfg.is_encdec:
-        if frontend_embeds is None:
-            frontend_embeds = jnp.zeros((b, cfg.frontend_seq, cfg.d_model),
-                                        dtype)
-        enc_out = _encode(params, frontend_embeds, cfg, dtype)
-        cross_kv = _cross_kv_all_layers(params, enc_out, cfg, dtype)
-        x = embed(params["embed"], tokens, dtype, cfg.onehot_embed)
-        if pad_mask is not None:
-            x = x + params["dec_pos"][positions].astype(dtype)
+    # an eager (tracing) padded prefill marks pad positions for the
+    # measured-sparsity accounting — left-pad zeros are not exploitable
+    # input sparsity (repro.accel.context.pad_positions)
+    import contextlib
+
+    from repro.accel import pad_positions
+    pad_scope = pad_positions(pad_mask) if pad_mask is not None \
+        else contextlib.nullcontext()
+    with pad_scope:
+        if cfg.is_encdec:
+            if frontend_embeds is None:
+                frontend_embeds = jnp.zeros(
+                    (b, cfg.frontend_seq, cfg.d_model), dtype)
+            enc_out = _encode(params, frontend_embeds, cfg, dtype)
+            cross_kv = _cross_kv_all_layers(params, enc_out, cfg, dtype)
+            x = embed(params["embed"], tokens, dtype, cfg.onehot_embed)
+            if pad_mask is not None:
+                x = x + params["dec_pos"][positions].astype(dtype)
+            else:
+                x = x + params["dec_pos"][:s][None].astype(dtype)
+            x, layers = _decoder_with_cross(params, x, cfg, positions,
+                                            cross_kv, cache.layers, None,
+                                            dtype, pad_mask=pad_mask)
         else:
-            x = x + params["dec_pos"][:s][None].astype(dtype)
-        x, layers = _decoder_with_cross(params, x, cfg, positions, cross_kv,
-                                        cache.layers, None, dtype,
-                                        pad_mask=pad_mask)
-    else:
-        cross_kv = None
-        x = _embed_inputs(params, tokens, cfg, frontend_embeds, dtype)
-        x, layers, _ = tfm.apply_stack(params["stack"], x, cfg, positions,
-                                       cache.layers, dtype=dtype,
-                                       pad_mask=pad_mask)
-    x = norm(params["final_norm"], x[:, -1:], cfg.norm)
-    logits = _lm_logits(params, x, cfg, dtype)
+            cross_kv = None
+            x = _embed_inputs(params, tokens, cfg, frontend_embeds, dtype)
+            x, layers, _ = tfm.apply_stack(params["stack"], x, cfg,
+                                           positions, cache.layers,
+                                           dtype=dtype, pad_mask=pad_mask)
+        x = norm(params["final_norm"], x[:, -1:], cfg.norm)
+        logits = _lm_logits(params, x, cfg, dtype)
     return logits[:, 0], DecodeCache(layers, pos_out, cross_kv)
 
 

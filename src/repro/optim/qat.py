@@ -1,9 +1,21 @@
-"""Quantization-aware-training primitives (straight-through estimators).
+"""Quantization- and noise-aware-training primitives.
 
-The accelerator matmul has its own STE (repro.accel.dispatch); these cover the
-*activation* nonlinearities of the paper's CIFAR networks: the binarizing
-sign of the ABN path and generic fake-quantization."""
+The accelerator matmul has its own STE (repro.accel.dispatch); these cover
+the *activation* nonlinearities of the paper's CIFAR networks (the
+binarizing sign of the ABN path, generic fake-quantization) plus the
+noise-robustness recipe for the 0.85 V corner:
+
+* :func:`noise_aware` — a scope that runs any forward/loss under the
+  noisy chip model (``adc_sigma_lsb`` override + a live ``adc_noise``
+  key), usable eagerly or inside a jitted step with the key as a traced
+  argument (noise-aware QAT).
+* :func:`calibrate_bn_stats` — the post-training calibration pass:
+  re-estimate the BN running statistics under analog noise so the folded
+  datapath registers center the NOISY pre-activation distribution.
+"""
 from __future__ import annotations
+
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -34,3 +46,70 @@ def fake_quant(x, bits: int, axis=None):
     qt = quantize(jax.lax.stop_gradient(x), bits, Coding.XNOR, axis=axis)
     y = qt.dequant
     return x + jax.lax.stop_gradient(y - x)
+
+
+# ----------------------------------------------------- noise robustness
+
+@contextlib.contextmanager
+def noise_aware(key, sigma_lsb: float):
+    """Run the enclosed (tracing) computation under the NOISY chip model:
+    every managed matmul resolves with ``adc_sigma_lsb=sigma_lsb`` and
+    draws its ADC noise from ``key``.
+
+    Works eagerly (each call draws fresh noise from ``key``) and inside a
+    jitted step when ``key`` is a traced argument — the per-dispatch
+    ``fold_in`` then threads the traced key through the compiled program,
+    so noise varies per call without retracing.  This is the noise-aware
+    QAT hook: wrap the loss computation so training sees the 0.85 V
+    corner's analog non-ideality (``repro.core.adc.SIGMA_LSB_CORNER``)
+    as a regularizer.
+    """
+    from repro import accel
+
+    with accel.override(adc_sigma_lsb=float(sigma_lsb)), \
+            accel.adc_noise(key):
+        yield
+
+
+def calibrate_bn_stats(params, batches, net, key, sigma_lsb: float,
+                       backend: str = "bpbs"):
+    """Noise-calibration pass: re-estimate BN running statistics under the
+    noisy chip model (the paper-standard post-training recipe for analog
+    CIM non-ideality).
+
+    Inference folds ``bn_mean``/``bn_var`` into the near-memory datapath's
+    scale/bias registers (:func:`repro.core.datapath.fold_batchnorm`), so
+    statistics estimated on a NOISELESS forward mis-center the noisy
+    pre-activation distribution at the 0.85 V corner.  This pass runs
+    ``len(batches)`` forward passes with live ADC noise
+    (:func:`noise_aware`), collects each layer's batch statistics exactly
+    as training does, and replaces the running stats with their plain
+    mean over the calibration batches.  Runs EAGERLY so every batch draws
+    fresh noise (a handful of batches suffices; no gradients).
+
+    Returns the updated ``params``.
+    """
+    from repro.models.cnn import cnn_forward
+
+    sums = None
+    n = 0
+    for i, batch in enumerate(batches):
+        with noise_aware(jax.random.fold_in(key, i), sigma_lsb):
+            _, stats = cnn_forward(params, batch["images"], net,
+                                   backend=backend, train=True)
+        stats = [(jnp.asarray(mu), jnp.asarray(var)) for mu, var in stats]
+        if sums is None:
+            sums = stats
+        else:
+            sums = [(a + mu, b + var)
+                    for (a, b), (mu, var) in zip(sums, stats)]
+        n += 1
+    if not n:
+        return params
+    new = {"layers": []}
+    for p, (mu, var) in zip(params["layers"], sums):
+        q = dict(p)
+        q["bn_mean"] = mu / n
+        q["bn_var"] = var / n
+        new["layers"].append(q)
+    return new

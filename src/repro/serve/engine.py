@@ -70,6 +70,15 @@ class ServeConfig:
     decode_block: int = 8
     prefill_chunk: Optional[int] = None
     max_admit_per_step: Optional[int] = 1
+    # batch-decoupled input quantization (ExecSpec.x_per_row), ON by
+    # default: every engine function traces under
+    # override(x_per_row=True), so quantizing backends compute one input
+    # scale per row — what a real per-vector input DAC sees — and a
+    # request's token stream never depends on which other requests share
+    # its batch.  This is what makes paged vs slot-batcher scheduling
+    # bitwise-identical on quantizing backends (the PR 6 caveat).  Turn
+    # off only to reproduce the old per-tensor batch-coupled behaviour.
+    x_per_row: bool = True
 
     def __post_init__(self):
         def _pos(name):
@@ -141,18 +150,28 @@ class Engine:
         self.last_decode_steps = 0
 
     def _meshed(self, fn):
-        """Trace ``fn`` under the engine's mesh + shard policy (ambient
-        for ``cs`` constraints and the shard_map program dispatch).  The
-        context manager is active at TRACE time, which is when dispatch
-        and the sharding constraints consult it; scoping it per engine —
+        """Trace ``fn`` under the engine's execution scopes: the mesh +
+        shard policy (ambient for ``cs`` constraints and the shard_map
+        program dispatch) and the serving quantization discipline
+        (``override(x_per_row=True)`` unless disabled).  The context
+        managers are active at TRACE time, which is when dispatch and the
+        sharding constraints consult them; scoping them per engine —
         rather than mutating process state at init — is what lets two
         engines (or an engine and a trainer) disagree."""
-        if self.mesh is None:
+        import contextlib
+
+        if self.mesh is None and not self.scfg.x_per_row:
             return fn
-        from repro.distributed.autoshard import use_mesh
 
         def wrapped(*args):
-            with use_mesh(self.mesh, self.scfg.shard_policy):
+            with contextlib.ExitStack() as stack:
+                if self.scfg.x_per_row:
+                    from repro.accel import override
+                    stack.enter_context(override(x_per_row=True))
+                if self.mesh is not None:
+                    from repro.distributed.autoshard import use_mesh
+                    stack.enter_context(
+                        use_mesh(self.mesh, self.scfg.shard_policy))
                 return fn(*args)
         return wrapped
 

@@ -200,11 +200,13 @@ def test_trace_counts_scanned_layers_at_model_scale():
 
 
 def test_adc_noise_scope_feeds_sigma_model():
-    """adc_sigma_lsb does nothing without a key; accel.adc_noise supplies
-    one per dispatch, and the draw is deterministic per scope."""
+    """adc_sigma_lsb without a key runs noiseless but WARNS (a sigma>0
+    request silently ignored is a footgun); accel.adc_noise supplies a key
+    per dispatch, and the draw is deterministic per scope."""
     x, w = _operands(n=300, m=16)
     spec = ExecSpec(backend="bpbs", ba=4, bx=4, adc_sigma_lsb=0.5)
-    y_silent = accel.matmul(x, w, spec)            # no key -> noiseless
+    with pytest.warns(RuntimeWarning, match="NOISELESS"):
+        y_silent = accel.matmul(x, w, spec)        # no key -> noiseless
     np.testing.assert_array_equal(
         np.asarray(y_silent),
         np.asarray(accel.matmul(x, w, spec.with_(adc_sigma_lsb=0.0))))

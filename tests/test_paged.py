@@ -370,20 +370,32 @@ def test_prefill_resume_rejects_encdec():
 
 # ------------------------------------------------------------- 2-dev mesh
 
+@pytest.mark.parametrize("backend", ["digital_int", "bpbs"])
+def test_paged_parity_quantized_cross_scheduler(backend):
+    """Cross-scheduler bitwise parity on QUANTIZING backends.
+
+    Serving quantizes inputs per ROW (``ServeConfig.x_per_row``, the
+    batch-decoupled DAC scale), so each request's logits are independent
+    of which other requests happen to share its decode batch — the two
+    schedulers admit with different timing, and the token streams must
+    still match token-for-token."""
+    cfg, params, scfg = _setup(max_seq=48, max_new_tokens=6)
+    cfg = cfg.with_accel(backend, ba=4, bx=4, bank_n=16)
+    params = init_params(cfg, KEY, max_seq=64)
+    _run_pair(cfg, params, scfg, _ragged_prompts(4, cfg.vocab))
+
+
 def test_paged_parity_2dev_mesh():
     """Paged scheduler under a 2-device "model" mesh: pools shard on
     head/latent dims, tables stay host-side.
 
-    Two assertions, each against the right reference:
-
-    * digital_int (integer-exact when sharded): meshed PagedScheduler ==
-      UNSHARDED PagedScheduler bitwise.  The slot batcher is NOT a valid
-      reference here — ``quantize(axis=None)`` scales the decode batch by
-      a per-tensor amax, so under a quantizing substrate each row's
-      logits depend on batch composition, and the two schedulers admit
-      with different timing.
-    * default float policy (row-independent, composition-free): meshed
-      PagedScheduler == unsharded slot batcher token-for-token.
+    Every policy — the default float one and the quantizing substrates —
+    is held to the same bar: meshed PagedScheduler == unsharded slot
+    batcher token-for-token.  Per-row input quantization (the serving
+    default) makes each row's scale a function of that row alone, so
+    batch composition and admission timing cancel out even on
+    ``digital_int``/``bpbs``; the old carve-out comparing quantized
+    paged-vs-paged only is gone.
     """
     from test_shard_exec import run_py
 
@@ -400,31 +412,23 @@ def test_paged_parity_2dev_mesh():
             for p in prompts: server.submit(p)
             return server.run()
 
-        # --- digital_int: paged-vs-paged must be bitwise under the mesh
-        cfg = get_config("olmo-1b").reduced().with_accel(
-            "digital_int", ba=4, bx=4, bank_n=16)
-        params = init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
-        prompts = [rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32)
-                   for l in (5, 9, 12, 4)]
         scfg = ServeConfig(max_seq=48, max_new_tokens=6, kv_block_size=8)
-        ref = run(PagedScheduler(params, cfg, scfg, n_slots=2), prompts)
         scfg_m = ServeConfig(max_seq=48, max_new_tokens=6, kv_block_size=8,
                              mesh=mesh)
-        got = run(PagedScheduler(params, cfg, scfg_m, n_slots=2), prompts)
-        for rid in ref:
-            assert ref[rid] == got[rid], ("int", rid, ref[rid], got[rid])
-
-        # --- float policy: meshed paged matches the unsharded slot batcher
-        cfg_f = get_config("olmo-1b").reduced()
-        params_f = init_params(cfg_f, jax.random.PRNGKey(0), max_seq=64)
-        prompts_f = [rng.integers(1, cfg_f.vocab, (int(l),)).astype(np.int32)
-                     for l in (5, 9, 12, 4)]
-        ref_f = run(ContinuousBatcher(params_f, cfg_f, scfg, n_slots=2),
-                    prompts_f)
-        got_f = run(PagedScheduler(params_f, cfg_f, scfg_m, n_slots=2),
-                    prompts_f)
-        for rid in ref_f:
-            assert ref_f[rid] == got_f[rid], ("f", rid, ref_f[rid], got_f[rid])
+        for backend in (None, "digital_int", "bpbs"):
+            cfg = get_config("olmo-1b").reduced()
+            if backend:
+                cfg = cfg.with_accel(backend, ba=4, bx=4, bank_n=16)
+            params = init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+            prompts = [rng.integers(1, cfg.vocab, (int(l),)).astype(np.int32)
+                       for l in (5, 9, 12, 4)]
+            ref = run(ContinuousBatcher(params, cfg, scfg, n_slots=2),
+                      prompts)
+            got = run(PagedScheduler(params, cfg, scfg_m, n_slots=2),
+                      prompts)
+            for rid in ref:
+                assert ref[rid] == got[rid], (backend, rid, ref[rid],
+                                              got[rid])
         print("OK")
     """, devices=2)
     assert "OK" in out
