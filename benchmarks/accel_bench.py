@@ -488,12 +488,131 @@ def run_sharded_scaling(json_path: str = "BENCH_shard.json",
     return results
 
 
+def run_stream_overlap(json_path: str = "BENCH_shard.json",
+                       scaling: dict = None, batch: int = 4,
+                       capacity_chips: int = 2,
+                       backend: str = "digital_int") -> dict:
+    """Double-buffered vs synchronous reload accounting across
+    ``data x model`` serve-mesh shapes {1x1, 1x4, 2x2, 2x4}.
+
+    A capacity-bound reduced olmo (PER-DEVICE budget ``capacity_chips``
+    590kb arrays, small enough that the tail streams at EVERY mesh
+    shape) is compiled twice per shape — ``double_buffer=False``
+    (synchronous: every forward pays the full reload serially) and
+    ``double_buffer=True`` (the reload prefetches into the spare bank
+    set while the other set computes) — and one decode step is traced
+    through dispatch.  The batch scales with the data axis (each data
+    replica serves ``batch`` rows of its own), so the throughput metric
+    is AGGREGATE tokens per step per device-Mcycle:
+
+        ``tokens_per_step / (per_device_cycles_per_step / 1e6)``
+
+    Like ``run_sharded_scaling`` this uses the analytic
+    ``model_shards``/``data_shards`` path (allocator + trace only), so
+    the numbers are exact on any host; the shard_map execution path is
+    pinned bit-identical by tests/test_stream_overlap.py.  digital_int
+    decode logits are additionally checked bit-identical here across
+    sync/overlap/1D/2D program layouts at each batch width.
+
+    Writes ``{"scaling": ..., "stream_overlap": ...}`` to ``json_path``
+    (``scaling`` = a ``run_sharded_scaling`` result to carry along)
+    BEFORE asserting:  (1) double-buffered accounting strictly beats
+    synchronous at every mesh shape, (2) the 2x4 mesh serves 2x the 1x4
+    batch at >= 1.5x aggregate tokens/step/Mcycle, (3) bit-identity
+    held.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import init_params, decode_step, init_cache
+
+    cfg = get_config("olmo-1b").reduced().with_accel(backend, ba=4, bx=4)
+    params = init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+    rng = np.random.default_rng(0)
+    results: dict = {"model": "olmo-1b.reduced", "backend": backend,
+                     "base_batch": batch,
+                     "capacity_chips_per_device": capacity_chips,
+                     "meshes": [], "bit_identical": True}
+    refs: dict = {}          # per batch width: resident-program logits
+    for d, m in ((1, 1), (1, 4), (2, 2), (2, 4)):
+        b = batch * d
+        tok = jnp.asarray(rng.integers(1, cfg.vocab, (b,)), jnp.int32)
+        if b not in refs:
+            # unsharded, fully resident reference for bit-identity
+            prog = accel.build_program(params, cfg)
+            p = accel.install_program(params, prog, cfg)
+            cache = init_cache(cfg, b, 32)
+            refs[b] = (tok, np.asarray(jax.jit(
+                lambda p, t, c: decode_step(p, t, c, cfg))(p, tok, cache)[0]))
+        tok = refs[b][0]
+        entry: dict = {"mesh": f"{d}x{m}", "data": d, "model": m,
+                       "tokens_per_step": b}
+        for db in (False, True):
+            prog = accel.build_program(params, cfg,
+                                       capacity_chips=capacity_chips,
+                                       model_shards=m, data_shards=d,
+                                       double_buffer=db)
+            p = accel.install_program(params, prog, cfg)
+            cache = init_cache(cfg, b, 32)
+            with accel.trace() as records:
+                logits = jax.jit(
+                    lambda p, t, c: decode_step(p, t, c, cfg))(p, tok, cache)[0]
+            if not (np.asarray(logits) == refs[b][1]).all():
+                results["bit_identical"] = False
+            es = accel.energy_summary(records)
+            key = "double_buffer" if db else "synchronous"
+            entry[key] = {
+                "cycles_per_step": es["total_cycles"],
+                "load_cycles": es["load_cycles"],
+                "load_cycles_hidden": es["load_cycles_hidden"],
+                "load_cycles_exposed": es["load_cycles_exposed"],
+                "tokens_per_step_per_mcycle":
+                    b / (es["total_cycles"] / 1e6),
+            }
+        entry["streamed_images"] = len(prog.summary()["streamed"])
+        entry["overlap_speedup"] = (
+            entry["synchronous"]["cycles_per_step"]
+            / entry["double_buffer"]["cycles_per_step"])
+        results["meshes"].append(entry)
+        emit(f"stream_overlap_{d}x{m}", 0.0,
+             f"streamed={entry['streamed_images']};"
+             f"sync_cycles={entry['synchronous']['cycles_per_step']};"
+             f"db_cycles={entry['double_buffer']['cycles_per_step']};"
+             f"speedup={entry['overlap_speedup']:.3f}")
+    # write the artifact BEFORE asserting (regression data must ship)
+    if json_path:
+        payload = {"stream_overlap": results}
+        if scaling is not None:
+            payload["scaling"] = scaling
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+    for e in results["meshes"]:
+        assert e["streamed_images"] > 0, \
+            f"mesh {e['mesh']}: capacity must bind for the bench to bite"
+        assert (e["double_buffer"]["tokens_per_step_per_mcycle"]
+                > e["synchronous"]["tokens_per_step_per_mcycle"]), \
+            f"mesh {e['mesh']}: double-buffered accounting must beat " \
+            f"synchronous: {e}"
+    by_mesh = {e["mesh"]: e for e in results["meshes"]}
+    t14 = by_mesh["1x4"]["double_buffer"]["tokens_per_step_per_mcycle"]
+    t24 = by_mesh["2x4"]["double_buffer"]["tokens_per_step_per_mcycle"]
+    assert by_mesh["2x4"]["tokens_per_step"] \
+        == 2 * by_mesh["1x4"]["tokens_per_step"]
+    assert t24 >= 1.5 * t14, \
+        f"2x4 must serve 2x batch at >=1.5x aggregate throughput: " \
+        f"{t24:.2f} vs {t14:.2f}"
+    assert results["bit_identical"], \
+        "digital_int decode logits diverged across program layouts"
+    return results
+
+
 def run():
     run_ragged_traffic()
     _run_backends()
     run_decode_cached()
     run_fused_decode()
-    run_sharded_scaling()
+    scaling = run_sharded_scaling()
+    run_stream_overlap(scaling=scaling)
 
 
 def _run_backends():
@@ -563,8 +682,9 @@ if __name__ == "__main__":
     if args.traffic_only:
         run_poisson_traffic(json_path=args.traffic_json)
     elif args.shard_only:
-        run_sharded_scaling(json_path=args.shard_json,
-                            max_devices=args.devices or 8)
+        scaling = run_sharded_scaling(json_path=args.shard_json,
+                                      max_devices=args.devices or 8)
+        run_stream_overlap(json_path=args.shard_json, scaling=scaling)
     elif args.fused_only:
         run_fused_decode(json_path=args.fused_json)
     else:
@@ -577,5 +697,6 @@ if __name__ == "__main__":
         if args.traffic:
             run_poisson_traffic(json_path=args.traffic_json)
         if args.devices:
-            run_sharded_scaling(json_path=args.shard_json,
-                                max_devices=args.devices)
+            scaling = run_sharded_scaling(json_path=args.shard_json,
+                                          max_devices=args.devices)
+            run_stream_overlap(json_path=args.shard_json, scaling=scaling)

@@ -94,6 +94,16 @@ class MvmRecord:
     copies and is scaled by :func:`vmapped` exactly like ``calls``
     (scanned layers / experts are separate array loads, batch rows are
     not).
+
+    ``stream_overlap``/``load_prologue`` carry the allocator's
+    double-buffer schedule (DESIGN.md §13): when set, the image's segment
+    prefetch into the spare bank set runs concurrently with CIMU compute,
+    so :func:`energy_summary` charges ``max(compute, load)`` wall cycles
+    per image copy instead of their sum — except for ``load_prologue``
+    copies (the first load of a pass has no compute to hide behind; NOT
+    scaled by :func:`vmapped`, the prologue is charged exactly once).
+    Load *energy* is always billed in full: pJ is work done, cycles are
+    wall time.
     """
 
     tag: str          # the layer path the policy resolved (spec.tag)
@@ -106,6 +116,14 @@ class MvmRecord:
     program: bool = False   # served from a compiled weight image?
     loads: int = 0          # image-copy reloads charged to this dispatch
     load_segments: int = 0  # 768-b row segments per reload (per device)
+    # double-buffered streaming (repro.accel.program, DESIGN.md §13):
+    # ``stream_overlap`` marks reloads the allocator scheduled to
+    # prefetch into the spare bank set while the other set computes;
+    # ``load_prologue`` counts this dispatch's un-hideable first loads
+    # (1 on the first streamed dispatch of a trace, else 0 — NOT scaled
+    # by vmapped, a pass has exactly one pipeline fill).
+    stream_overlap: bool = False
+    load_prologue: int = 0
     # multi-chip mapping (repro.accel.shard): the record is emitted once
     # per LOGICAL matmul before shard_map — a sharded trace has the same
     # record count/calls/loads as the unsharded trace — and these two
@@ -113,6 +131,10 @@ class MvmRecord:
     # per-device wall cycles (local tile) and system energy (x devices).
     devices: int = 1        # mesh "model"-axis shards executing this MVM
     partition: str = ""     # "col" | "row" | "" (unsharded)
+    # mesh "data"-axis replicas: batch rows split over "data" while the
+    # image (and its reloads) replicate per data shard — per-device wall
+    # cycles divide the calls, system energy multiplies the loads
+    data_shards: int = 1
     # fused near-memory datapath: post-reduce ops per output element
     # (scale / bias / activation / saturate each count 1) — what
     # energy_summary charges as datapath post-op energy
@@ -173,11 +195,26 @@ def vmapped(n: int) -> Iterator[None]:
 def record(rec: MvmRecord) -> None:
     if not _TRACE_STACK:
         return
+    # vmapped/scanned instances scale the work (calls, loads) but NOT the
+    # prologue: the double-buffer pipeline fills once per pass, and every
+    # later instance's load hides behind the previous instance's compute
     for n in _CALL_SCALE_STACK:
         rec = dataclasses.replace(rec, calls=rec.calls * n,
                                   loads=rec.loads * n)
     for buf in _TRACE_STACK:
         buf.append(rec)
+
+
+def streamed_load_seen() -> bool:
+    """Has the innermost trace scope already recorded a streamed load?
+
+    The dispatcher uses this to place the double-buffer *prologue*: the
+    first streamed dispatch of a pass has no in-flight compute to hide
+    its load behind, every later one prefetches during the previous
+    dispatch's MVMs.  Innermost scope on purpose — a nested trace is a
+    fresh pass from its own first load.
+    """
+    return any(r.loads for r in _TRACE_STACK[-1]) if _TRACE_STACK else False
 
 
 # ------------------------------------------------------------- ADC noise
@@ -277,16 +314,32 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     cycle full-array reload).  Returns totals plus a per-tag breakdown
     (energy in pJ, CIMU cycles, reload cycles).
 
-    Mesh-sharded records (``devices > 1``, DESIGN.md §9) aggregate
+    **Double-buffered streaming** (``stream_overlap``, DESIGN.md §13):
+    the DMA and CIMU are independent engines, so a reload the allocator
+    scheduled for overlap prefetches the next segment list into the
+    spare bank set while the other set computes.  Per image copy the
+    charged wall cycles become ``max(compute, load)`` instead of their
+    sum; the ``load_prologue`` copies (the pipeline fill — nothing is
+    computing yet) stay fully exposed.  ``load_cycles`` remains the
+    FULL per-device load-cycle figure (the DMA work done), split into
+    ``load_cycles_hidden`` (behind compute) and ``load_cycles_exposed``
+    (on the wall clock); only the exposed share enters
+    ``total_cycles``.  Load *energy* is always billed in full — pJ is
+    work done, cycles are wall time.
+
+    Mesh-sharded records (``devices > 1`` model shards and/or
+    ``data_shards > 1`` batch replicas, DESIGN.md §9/§13) aggregate
     without double-counting under two explicit conventions:
 
     * ``pj`` totals are SYSTEM energy: the local tile's energy summed
       over all shards (devices run their tiles concurrently; every
-      joule is real).
+      joule is real).  Data replicas each hold — and reload — their own
+      image copy, so load energy multiplies by ``data_shards``.
     * ``cycles`` totals are PER-DEVICE wall cycles: the local tile's
       cycles (shards run in parallel, so per-device cycles are the
-      latency proxy), including the per-device reload cycles of
-      streamed images.
+      latency proxy).  Batch rows split over "data", so per-device MVM
+      calls divide by ``data_shards``; per-device reload cycles do not
+      (every replica writes its own banks).
 
     Fused datapath epilogues (``post_ops > 0``) charge the near-memory
     post-reduce pipeline: one ``datapath_out`` pJ per op per LOGICAL
@@ -310,6 +363,8 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     total_cycles = 0
     load_pj = 0.0
     load_cycles = 0
+    load_hidden = 0
+    load_exposed = 0
     post_pj = 0.0
     sp_weight = 0
     sp_sum = 0.0
@@ -319,11 +374,13 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
         row = by_tag.setdefault(
             r.tag or r.backend,
             {"backend": r.backend, "mvms": 0, "pj": 0.0, "cycles": 0,
-             "load_cycles": 0, "post_pj": 0.0})
+             "load_cycles": 0, "load_cycles_hidden": 0,
+             "load_cycles_exposed": 0, "post_pj": 0.0})
         row["mvms"] += r.calls
         if r.backend == "digital":
             continue
         d_sh = max(getattr(r, "devices", 1), 1)
+        d_dp = max(getattr(r, "data_shards", 1), 1)
         n_loc = r.n // d_sh if r.partition == "row" else r.n
         m_loc = r.m // d_sh if r.partition == "col" else r.m
         shape = E.MvmShape(n=n_loc, m=m_loc, ba=r.ba, bx=r.bx)
@@ -341,16 +398,32 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
                              sparsity if r_sp is None else r_sp,
                              readout, plane_skip=skip)["total"] \
             * r.calls * d_sh
-        cyc = E.mvm_cycles(shape, readout, plane_skip=skip) * r.calls
+        # per-device wall cycles: batch rows split over the "data" axis
+        calls_dev = -(-r.calls // d_dp)
+        cyc = E.mvm_cycles(shape, readout, plane_skip=skip) * calls_dev
         if r.loads:
             segs = r.loads * r.load_segments       # per-device segments
-            lc = segs * seg_cycles                 # per-device wall cycles
-            lp = segs * seg_words * e_dma * d_sh   # system energy
+            lc = segs * seg_cycles                 # per-device DMA cycles
+            lp = segs * seg_words * e_dma * d_sh * d_dp   # system energy
+            hidden = 0
+            if getattr(r, "stream_overlap", False):
+                # double-buffer schedule: each non-prologue copy's load
+                # runs during a compute window of one copy's MVMs, so it
+                # hides min(load, compute) of its cycles
+                lc_copy = r.load_segments * seg_cycles
+                cc_copy = cyc // r.loads
+                p = min(max(getattr(r, "load_prologue", 0), 0), r.loads)
+                hidden = (r.loads - p) * min(lc_copy, cc_copy)
+            exposed = lc - hidden
             row["load_cycles"] += lc
+            row["load_cycles_hidden"] += hidden
+            row["load_cycles_exposed"] += exposed
             load_cycles += lc
+            load_hidden += hidden
+            load_exposed += exposed
             load_pj += lp
             pj += lp
-            cyc += lc
+            cyc += exposed
         if getattr(r, "post_ops", 0):
             pp = r.post_ops * r.m * r.calls * e_post
             row["post_pj"] += pp
@@ -362,6 +435,8 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
         total_cycles += cyc
     return {"total_pj": total_pj, "total_cycles": total_cycles,
             "load_pj": load_pj, "load_cycles": load_cycles,
+            "load_cycles_hidden": load_hidden,
+            "load_cycles_exposed": load_exposed,
             "post_pj": post_pj,
             "input_sparsity": (sp_sum / sp_weight if sp_weight else None),
             "plane_skip": (skip_sum / skip_weight if skip_weight else None),

@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from .context import (ExecContext, MvmRecord, current_override,
-                      current_pad_mask, next_noise_key, record, tracing)
+                      current_pad_mask, next_noise_key, record,
+                      streamed_load_seen, tracing)
 from .registry import get_backend
 from .spec import ExecSpec
 
@@ -90,6 +91,12 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
     if not tracing():
         return
     streamed = image is not None and not image.resident
+    overlap = streamed and getattr(image, "overlap", False)
+    # double-buffer prologue: the first streamed load of a pass has no
+    # in-flight compute to hide behind; every later one prefetches into
+    # the spare bank set during the previous dispatch's MVMs.  Checked
+    # against the innermost trace scope, BEFORE this record lands.
+    prologue = 1 if (overlap and not streamed_load_seen()) else 0
     skipped, total = _measured_planes(spec, x)
     # devices/partition come from the image's COMPILED layout: the trace
     # is the chip cost model, and a program built for an N-chip mesh
@@ -105,8 +112,12 @@ def _record_mvm(spec: ExecSpec, x: jax.Array, w: jax.Array,
         program=image is not None,
         loads=1 if streamed else 0,
         load_segments=image.segments if streamed else 0,
+        stream_overlap=overlap,
+        load_prologue=prologue,
         devices=image.devices if image is not None else 1,
         partition=(image.partition or "") if image is not None else "",
+        data_shards=(max(getattr(image, "data_shards", 1), 1)
+                     if image is not None else 1),
         post_ops=post.n_ops() if post is not None else 0,
         sparsity=_measured_sparsity(spec, x),
         planes_skipped=skipped,

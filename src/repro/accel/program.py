@@ -90,6 +90,16 @@ class CimaImage:
     # all-reduced after the ADC epilogue); None = unsharded.
     partition: Optional[str] = None
     devices: int = 1              # model-axis shards the image is cut into
+    # double-buffered streaming (DESIGN.md §13): the allocator schedules
+    # a streamed image's reload to prefetch its segment list into the
+    # spare bank set while the other set computes — dispatch records the
+    # schedule (MvmRecord.stream_overlap) so energy_summary charges
+    # max(compute, load) wall cycles instead of their sum.  Accounting
+    # only: the arithmetic is identical to the synchronous path.
+    overlap: bool = False
+    # mesh "data"-axis replicas: batch rows split over "data"; the image
+    # itself (and its reloads) replicates per data shard
+    data_shards: int = 1
 
 
 jax.tree_util.register_dataclass(
@@ -97,7 +107,7 @@ jax.tree_util.register_dataclass(
     data_fields=["ws", "wq", "scale"],
     meta_fields=["path", "tag", "ba", "coding", "per_channel", "n", "m",
                  "copies", "tiles", "segments", "resident", "partition",
-                 "devices"],
+                 "devices", "overlap", "data_shards"],
 )
 
 
@@ -156,6 +166,19 @@ def _row_parallel_leaves() -> tuple:
 _ROW_PARALLEL_LEAVES = _row_parallel_leaves()
 
 
+def sharding_excluded(tag: str) -> bool:
+    """Is this projection consumed under ``vmap`` and therefore never
+    partitioned over the mesh "model" axis?
+
+    MoE expert stacks and whisper's per-layer cross-attention dispatch
+    inside a ``vmap`` — their mapped axis is the natural EP/layer shard,
+    not M/N.  Surfaced in :meth:`CimaProgram.summary` (``excluded_from_
+    sharding``) so capacity planning on a mesh isn't silently wrong
+    about which images actually shrink per device.
+    """
+    return tag in _MOE_EXPERT.values() or tag.startswith("cross.")
+
+
 def partition_for(tag: str, n: int, m: int, shards: int) -> Optional[str]:
     """How one projection splits across ``shards`` model-axis devices.
 
@@ -171,7 +194,7 @@ def partition_for(tag: str, n: int, m: int, shards: int) -> Optional[str]:
     """
     if shards <= 1:
         return None
-    if tag in _MOE_EXPERT.values() or tag.startswith("cross."):
+    if sharding_excluded(tag):
         return None
     leaf = tag.rsplit(".", 1)[-1]
     if leaf in _ROW_PARALLEL_LEAVES:
@@ -341,6 +364,12 @@ class CimaProgram:
     capacity_tiles: Optional[int] = None    # None = unbounded array (PER DEVICE)
     version: int = 0
     model_shards: int = 1                   # mesh "model"-axis size at build
+    data_shards: int = 1                    # mesh "data"-axis size at build
+    double_buffer: bool = True              # overlap-schedule streamed reloads?
+    # policy tags excluded from model-axis partitioning (vmapped MoE
+    # expert / cross-attention images, see sharding_excluded) — their
+    # tiles do NOT shrink with model_shards
+    excluded: tuple = ()
 
     def __bool__(self) -> bool:
         return bool(self.images)
@@ -367,6 +396,33 @@ class CimaProgram:
         return sum(i.segments * i.copies for i in self.images.values()
                    if i.resident) * segment_cycles()
 
+    def stream_schedule(self) -> list:
+        """Per-image reload schedule of the streamed set (DESIGN.md §13).
+
+        One row per non-resident image: how many copies reload per pass,
+        the per-copy segment count, the full per-pass DMA cycles, and
+        whether the reload is ``overlap``-scheduled (double-buffered —
+        hidden behind compute up to ``max(compute, load)`` per copy) or
+        synchronous.  The hidden/exposed *split* is trace-dependent
+        (compute cycles per copy) and reported by
+        :func:`~repro.accel.context.energy_summary`; this is the static
+        schedule the allocator committed to.
+        """
+        rows = []
+        for img in self.images.values():
+            if img.resident:
+                continue
+            rows.append({
+                "tag": img.tag or img.path,
+                "path": img.path,
+                "copies": img.copies,
+                "segments": img.segments,
+                "reload_cycles_per_pass":
+                    img.segments * img.copies * segment_cycles(),
+                "overlap": img.overlap,
+            })
+        return sorted(rows, key=lambda r: (r["tag"], r["path"]))
+
     def summary(self) -> dict:
         from repro.core import energy as E
 
@@ -374,8 +430,12 @@ class CimaProgram:
             "images": len(self.images),
             "copies": sum(i.copies for i in self.images.values()),
             "model_shards": self.model_shards,
+            "data_shards": self.data_shards,
+            "double_buffer": self.double_buffer,
             "partitioned": sum(1 for i in self.images.values()
                                if i.partition is not None),
+            "excluded_from_sharding": sorted(self.excluded),
+            "excluded_count": len(self.excluded),
             "capacity_tiles": self.capacity_tiles,
             "capacity_bits": (None if self.capacity_tiles is None else
                               self.capacity_tiles * E.CIMA_ROWS * E.CIMA_COLS),
@@ -384,6 +444,7 @@ class CimaProgram:
             "streamed": sorted(i.tag or i.path
                                for i in self.images.values()
                                if not i.resident),
+            "streamed_images": self.stream_schedule(),
             "initial_load_cycles": self.initial_load_cycles(),
             "reload_cycles_per_pass": self.reload_cycles_per_pass(),
         }
@@ -391,7 +452,9 @@ class CimaProgram:
 
 def build_program(params, cfg, capacity_chips: Optional[int] = None,
                   version: int = 0, mesh=None,
-                  model_shards: Optional[int] = None) -> CimaProgram:
+                  model_shards: Optional[int] = None,
+                  data_shards: Optional[int] = None,
+                  double_buffer: bool = True) -> CimaProgram:
     """Compile every policy-managed projection of ``params`` into a
     :class:`CimaImage` and place the images on the virtual array.
 
@@ -401,32 +464,52 @@ def build_program(params, cfg, capacity_chips: Optional[int] = None,
     order — the paper's own strategy of keeping the hottest,
     earliest-touched matrices stationary and streaming the tail.
 
-    ``mesh`` (a :class:`jax.sharding.Mesh` with a ``"model"`` axis) or
-    ``model_shards`` turns on the multi-chip mapping (DESIGN.md §9):
-    each projection is partitioned per :func:`partition_for`, its
+    ``mesh`` (a :class:`jax.sharding.Mesh` with ``"model"`` and/or
+    ``"data"`` axes) or explicit ``model_shards``/``data_shards`` turns
+    on the multi-chip mapping (DESIGN.md §9/§13): each projection is
+    partitioned over "model" per :func:`partition_for`, its
     tiles/segments become per-device shard sizes, and residency is
     decided against the per-device ``capacity_chips`` budget — a
-    projection that streams on 1 device can be resident on 8.
+    projection that streams on 1 device can be resident on 8.  The
+    "data" axis never cuts an image (batch rows split, weights
+    replicate); it is stamped on every image so the trace charges
+    per-device calls and per-replica load energy correctly.
+
+    ``double_buffer`` (default on) overlap-schedules every streamed
+    image: its reload prefetches into the spare bank set while the
+    other set computes, so the trace charges ``max(compute, load)``
+    wall cycles per copy plus a once-per-pass prologue instead of their
+    sum.  Accounting only — numerics are bit-identical either way.
     """
     shards = int(model_shards) if model_shards is not None else (
         int(dict(mesh.shape).get("model", 1)) if mesh is not None else 1)
+    data = int(data_shards) if data_shards is not None else (
+        int(dict(mesh.shape).get("data", 1)) if mesh is not None else 1)
     images: dict = {}
+    excluded: list = []
     used = 0
     for path, key, tag, kind, w in _walk(params, cfg):
         spec = cfg.policy.resolve(tag, kind=kind)
         if spec.backend not in PROGRAM_BACKENDS:
             continue
         part = partition_for(tag, int(w.shape[-2]), int(w.shape[-1]), shards)
+        if shards > 1 and sharding_excluded(tag):
+            excluded.append(tag)
         img = _compile_image(w, spec, _path_str(path, key),
                              shards=shards, partition=part)
+        if data > 1:
+            img = dataclasses.replace(img, data_shards=data)
         need = img.tiles * img.copies
         if capacity_chips is not None and used + need > capacity_chips:
-            img = dataclasses.replace(img, resident=False)
+            img = dataclasses.replace(img, resident=False,
+                                      overlap=bool(double_buffer))
         else:
             used += need
         images[img.path] = img
     return CimaProgram(images=images, capacity_tiles=capacity_chips,
-                       version=version, model_shards=shards)
+                       version=version, model_shards=shards,
+                       data_shards=data, double_buffer=bool(double_buffer),
+                       excluded=tuple(sorted(set(excluded))))
 
 
 def _set_in(tree, path: tuple, key, value):
@@ -510,11 +593,15 @@ class ProgramManager:
     """
 
     def __init__(self, cfg, capacity_chips: Optional[int] = None,
-                 mesh=None, model_shards: Optional[int] = None):
+                 mesh=None, model_shards: Optional[int] = None,
+                 data_shards: Optional[int] = None,
+                 double_buffer: bool = True):
         self.cfg = cfg
         self.capacity_chips = capacity_chips
         self.mesh = mesh
         self.model_shards = model_shards
+        self.data_shards = data_shards
+        self.double_buffer = double_buffer
         self._program: Optional[CimaProgram] = None
         self._dirty = True
         self.version = 0
@@ -530,6 +617,8 @@ class ProgramManager:
             self._program = build_program(
                 params, self.cfg, capacity_chips=self.capacity_chips,
                 version=self.version, mesh=self.mesh,
-                model_shards=self.model_shards)
+                model_shards=self.model_shards,
+                data_shards=self.data_shards,
+                double_buffer=self.double_buffer)
             self._dirty = False
         return self._program

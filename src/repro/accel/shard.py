@@ -26,6 +26,17 @@ sharding must never change the operand grid.  Likewise the final
 weight scales; a per-row ``qx.scale`` (last dim 1) rides into the body
 replicated and broadcasts against the local tile.
 
+A 2D ``data x model`` mesh (DESIGN.md §13) composes orthogonally: when
+the mesh carries a ``"data"`` axis that divides the activation's leading
+(batch) dim, batch rows split along it — each data shard holds a full
+replica of the image's per-device tiles and runs its slice of the batch.
+Weights/planes stay data-replicated, the row-parallel ``psum`` stays on
+``"model"`` only (data shards hold disjoint rows; nothing to reduce),
+and per-row epilogue operands (``qx.scale`` under ``x_per_row``, tensor
+biases carrying the residual) split their leading dim with the batch.
+Because quantization is global and the grid is fixed before the split,
+the 2D path is bit-for-bit identical to the 1D and unsharded paths.
+
 The Pallas ``cima_mvm`` kernel composes directly: inside the body it sees
 the local ``[N_loc, BA, M_loc]`` planes, so its bank grid dimension *is*
 the per-device tile.
@@ -48,37 +59,66 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 
-def _x_spec(ndim: int, partition: str) -> P:
+def _data_axis(mesh, x_shape) -> Optional[str]:
+    """The mesh "data" axis name, iff batch rows can split along it.
+
+    Requires a >1-sized ``"data"`` axis, an activation with a distinct
+    leading batch dim (ndim >= 2), and divisibility.  Anything else
+    falls back to data-replicated execution — placement only, never a
+    numerics decision.
+    """
+    if "data" not in getattr(mesh, "axis_names", ()):
+        return None
+    d = int(dict(mesh.shape)["data"])
+    if d <= 1 or len(x_shape) < 2 or x_shape[0] % d != 0:
+        return None
+    return "data"
+
+
+def _x_spec(ndim: int, partition: str, lead: Optional[str] = None) -> P:
+    spec = [None] * ndim
+    if lead is not None:
+        spec[0] = lead
     if partition == "row":
-        return P(*([None] * (ndim - 1) + ["model"]))
-    return P()
+        spec[-1] = "model"
+    return P(*spec)
 
 
-def _out_spec(ndim: int, partition: str) -> P:
+def _out_spec(ndim: int, partition: str, lead: Optional[str] = None) -> P:
+    spec = [None] * ndim
+    if lead is not None:
+        spec[0] = lead
     if partition == "col":
-        return P(*([None] * (ndim - 1) + ["model"]))
-    return P()
+        spec[-1] = "model"
+    return P(*spec)
 
 
 def _ws_spec(partition: str) -> P:
-    # ws layout [N, BA, M]
+    # ws layout [N, BA, M] — always data-replicated
     return P("model", None, None) if partition == "row" \
         else P(None, None, "model")
 
 
 def _wq_spec(partition: str) -> P:
-    # wq layout [N, M]
+    # wq layout [N, M] — always data-replicated
     return P("model", None) if partition == "row" else P(None, "model")
 
 
-def _post_spec(arr, part: str, m: int) -> P:
+def _post_spec(arr, part: str, m: int, lead: Optional[str] = None,
+               rows: int = 0) -> P:
     """Placement of one epilogue operand: arrays whose last dim is the
-    output dim split with the columns under "col"; everything else
-    (scalars, per-tensor scales, row-parallel operands applied after the
-    psum) is replicated."""
-    if part == "col" and arr.ndim and arr.shape[-1] == m:
-        return P(*([None] * (arr.ndim - 1) + ["model"]))
-    return P()
+    output dim split with the columns under "col"; arrays whose leading
+    dim is the batch (per-row input scales, tensor biases carrying the
+    residual) split with the rows over "data"; everything else (scalars,
+    per-tensor scales, row-parallel operands applied after the psum) is
+    replicated."""
+    nd = arr.ndim
+    spec = [None] * nd
+    if lead is not None and nd >= 2 and arr.shape[0] == rows:
+        spec[0] = lead
+    if part == "col" and nd and arr.shape[-1] == m:
+        spec[-1] = "model"
+    return P(*spec)
 
 
 def sharded_program_matmul(x: jax.Array, spec, image, mesh,
@@ -106,6 +146,10 @@ def sharded_program_matmul(x: jax.Array, spec, image, mesh,
     assert part in ("col", "row"), part
     # dynamic-operand quantization on the FULL activation (global scale)
     qx = quantize_input(x, spec)
+    # 2D mesh: batch rows split over "data" when the axis divides them;
+    # decided AFTER quantization so the operand grid never sees the mesh
+    lead = _data_axis(mesh, qx.q.shape)
+    rows = int(qx.q.shape[0]) if qx.q.ndim >= 2 else 0
 
     # one scaffold (psum placement, manual() scoping, in/out specs) for
     # every backend — only the local tile compute differs
@@ -136,6 +180,10 @@ def sharded_program_matmul(x: jax.Array, spec, image, mesh,
             if k:
                 kd = jax.random.fold_in(k[0],
                                         jax.lax.axis_index("model"))
+                if lead is not None:
+                    # data shards are distinct chips too: decorrelate
+                    # their ADC noise fields exactly like model shards
+                    kd = jax.random.fold_in(kd, jax.lax.axis_index(lead))
             if spec.backend == "bpbs":
                 return bpbs_matmul_planes(xq, ws, bcfg, kd)
             return bpbs_matmul_planes_reference(xq, ws, bcfg)
@@ -166,7 +214,7 @@ def sharded_program_matmul(x: jax.Array, spec, image, mesh,
         # own columns' registers and "row" tiles see the full (post-psum)
         # vectors replicated
         epi_ops = (qx.scale, image.scale) + post.dyn_args()
-        epi_specs = tuple(_post_spec(jnp.asarray(a), part, m)
+        epi_specs = tuple(_post_spec(jnp.asarray(a), part, m, lead, rows)
                           for a in epi_ops)
         operands = operands + epi_ops
         w_specs = w_specs + epi_specs
@@ -187,8 +235,9 @@ def sharded_program_matmul(x: jax.Array, spec, image, mesh,
     ndim = qx.q.ndim
     with manual():
         y = shard_map(
-            body, mesh=mesh, in_specs=(_x_spec(ndim, part),) + w_specs,
-            out_specs=_out_spec(ndim, part), check_rep=False,
+            body, mesh=mesh,
+            in_specs=(_x_spec(ndim, part, lead),) + w_specs,
+            out_specs=_out_spec(ndim, part, lead), check_rep=False,
         )(qx.q, *operands)
     if post is None:
         return rescale(y, qx.scale, image.scale, spec)

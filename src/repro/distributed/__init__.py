@@ -1,7 +1,7 @@
 """Distribution layer: divisibility-aware sharding rules, the explicit
 :class:`ShardPolicy`, and the ambient-mesh activation constraints."""
-from .autoshard import (cs, get_mesh, get_shard_policy, manual, set_mesh,
-                        use_mesh)
+from .autoshard import (cs, get_mesh, get_shard_policy, manual,
+                        mesh_axis_size, set_mesh, use_mesh)
 from .sharding import (ShardPolicy, batch_specs, cache_specs, param_specs,
                        state_specs)
 
@@ -12,5 +12,5 @@ from .sharding import (ShardPolicy, batch_specs, cache_specs, param_specs,
 __all__ = [
     "ShardPolicy", "param_specs", "batch_specs", "cache_specs",
     "state_specs", "cs", "get_mesh", "get_shard_policy", "manual",
-    "set_mesh", "use_mesh",
+    "mesh_axis_size", "set_mesh", "use_mesh",
 ]

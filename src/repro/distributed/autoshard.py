@@ -11,6 +11,12 @@ Logical axes:
   "tp" -> "model"
   "fsdp" -> "data"
 
+Serving meshes are ``data x model`` (DESIGN.md §13): "model" cuts the
+compiled CIMA images (TP), "data" splits batch rows / KV pools / slot
+state across full image replicas (DP).  A 1D ``("model",)`` mesh is the
+degenerate data=1 case; every resolution rule filters by the axes the
+mesh actually has, so model code is shape-agnostic.
+
 Without these constraints XLA loses the head/expert sharding through
 ``lax.scan`` carries (carries default to replicated), silently replicating
 attention across the model axis — a 16x compute blowup first caught by the
@@ -37,6 +43,16 @@ def set_mesh(mesh: Optional[Mesh], policy=None):
 
 def get_mesh() -> Optional[Mesh]:
     return getattr(_STATE, "mesh", None)
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of one ambient-mesh axis — 1 when no mesh is set or the mesh
+    doesn't carry the axis.  The shape-agnostic way to ask "how many
+    data (or model) shards am I running under?"."""
+    mesh = get_mesh()
+    if mesh is None or name not in mesh.axis_names:
+        return 1
+    return int(dict(mesh.shape)[name])
 
 
 def get_shard_policy():

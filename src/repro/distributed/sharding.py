@@ -43,14 +43,26 @@ class ShardPolicy:
     concurrently-live serving engine (or two engines) can hold different
     policies without clobbering each other.  Every spec function below
     takes ``policy=``; ``None`` falls back to :data:`DEFAULT_POLICY`.
+
+    ``data_shards`` declares the intended size of the mesh ``"data"``
+    axis for serving (DESIGN.md §13): batch rows, KV pools and slot
+    state split along it while compiled CIMA images replicate per data
+    shard.  ``1`` (the default) is the 1D model-only layout.  It is a
+    declaration the engine validates against the actual mesh — the spec
+    functions themselves always read sizes from the mesh, so a policy
+    with the default value keeps working on any mesh shape.
     """
 
     mode: str = "2d"
+    data_shards: int = 1
 
     def __post_init__(self):
         if self.mode not in ("2d", "fsdp"):
             raise ValueError(f"ShardPolicy mode must be '2d' or 'fsdp', "
                              f"got {self.mode!r}")
+        if int(self.data_shards) < 1:
+            raise ValueError(f"ShardPolicy data_shards must be >= 1, "
+                             f"got {self.data_shards!r}")
 
     @property
     def is_fsdp(self) -> bool:

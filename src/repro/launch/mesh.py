@@ -21,3 +21,27 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     assert n % model == 0
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_serve_mesh(data: int = 1, model: int = 1):
+    """An explicit ``data x model`` serving mesh (DESIGN.md §13).
+
+    ``model`` chips per replica cut each compiled CIMA image (TP);
+    ``data`` replicas each hold a full image copy and serve their slice
+    of the batch (DP for activations, KV pools and slot state).  Uses
+    the first ``data * model`` available devices, so a 2x2 mesh works on
+    an 8-device host.  ``data=1`` is the 1D model-parallel layout every
+    pre-mesh caller used — same numerics, same per-device tiles.
+    """
+    n = len(jax.devices())
+    need = data * model
+    if need > n:
+        raise ValueError(
+            f"make_serve_mesh({data}x{model}) needs {need} devices, "
+            f"have {n} (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count=N for simulated chips)")
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = np.asarray(jax.devices()[:need]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))

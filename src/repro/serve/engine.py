@@ -47,13 +47,24 @@ class ServeConfig:
     # allocation (N x 590kb arrays PER DEVICE); None = everything resident.
     use_program: bool = True
     cima_chips: Optional[int] = None
-    # multi-chip mesh serving (DESIGN.md §9): a jax Mesh with a "model"
-    # axis.  The program compiles partitioned (column-parallel images
+    # double-buffered streaming (DESIGN.md §13): overlap-schedule every
+    # over-capacity (streamed) image so its reload prefetches into the
+    # spare bank set while the other set computes — the trace charges
+    # max(compute, load) wall cycles per copy plus a once-per-pass
+    # prologue instead of their sum.  Accounting only, numerics are
+    # bit-identical; turn off to model a chip without the second bank
+    # set's write port.
+    stream_double_buffer: bool = True
+    # multi-chip mesh serving (DESIGN.md §9/§13): a jax Mesh, either 1D
+    # ("model",) or 2D data x model (launch.mesh.make_serve_mesh).  The
+    # program compiles partitioned over "model" (column-parallel images
     # split along M, row-parallel along N with a psum after the ADC
-    # epilogue), params/images/caches are placed with the sharding rules,
-    # and every jitted engine function traces under this mesh.  The
-    # ShardPolicy is explicit — a concurrently-live trainer or second
-    # engine can hold a different one (no module-global policy).
+    # epilogue); batch rows, KV pools and slot state split over "data"
+    # with full image replicas per data shard;
+    # params/images/caches are placed with the sharding rules, and every
+    # jitted engine function traces under this mesh.  The ShardPolicy is
+    # explicit — a concurrently-live trainer or second engine can hold a
+    # different one (no module-global policy).
     mesh: Optional[object] = None               # jax.sharding.Mesh
     shard_policy: Optional[object] = None       # distributed.ShardPolicy
     # paged serving (serve.kv / serve.scheduler).  kv_block_size is the
@@ -102,6 +113,20 @@ class ServeConfig:
         if self.temperature < 0:
             raise ValueError(f"ServeConfig.temperature must be >= 0, "
                              f"got {self.temperature}")
+        # a policy that DECLARES data_shards must match the actual mesh
+        # (a silent mismatch would place caches on an axis that doesn't
+        # exist and quietly serve 1/N of the intended batch per replica)
+        declared = getattr(self.shard_policy, "data_shards", 1)
+        if declared > 1:
+            if self.mesh is None:
+                raise ValueError(
+                    f"shard_policy.data_shards={declared} requires a mesh "
+                    f"with a 'data' axis, got mesh=None")
+            actual = int(dict(self.mesh.shape).get("data", 1))
+            if actual != declared:
+                raise ValueError(
+                    f"shard_policy.data_shards={declared} but the mesh "
+                    f"'data' axis has size {actual}")
 
 
 class Engine:
@@ -120,9 +145,10 @@ class Engine:
 
         self.program = None
         if serve_cfg.use_program:
-            program = build_program(params, cfg,
-                                    capacity_chips=serve_cfg.cima_chips,
-                                    mesh=self.mesh)
+            program = build_program(
+                params, cfg, capacity_chips=serve_cfg.cima_chips,
+                mesh=self.mesh,
+                double_buffer=serve_cfg.stream_double_buffer)
             if program:
                 self.program = program
                 params = install_program(params, program, cfg)

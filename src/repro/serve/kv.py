@@ -286,23 +286,35 @@ def paged_cache_specs(paged_shapes: PagedCache, layout: PagedLayout, mesh,
                       policy=None):
     """NamedSharding tree for a :class:`PagedCache` under a serving mesh.
 
-    Pool leaves have no batch dim; the block and block-offset dims are
-    the paging address space and stay replicated — "model" goes on the
-    largest divisible remaining dim (heads/latent), mirroring
+    Pool leaves have no batch dim; the block-offset dim is the paging
+    address space and stays replicated — "model" goes on the largest
+    divisible remaining dim (heads/latent), mirroring
     ``distributed.sharding.cache_specs`` so a gathered dense view lines
-    up with the slot batcher's sharded cache.  State leaves use the
-    cache rule directly (batch = ``n_slots``)."""
+    up with the slot batcher's sharded cache.  On a 2D ``data x model``
+    mesh (DESIGN.md §13) the physical block-id dim additionally splits
+    over "data" — each data replica owns ``num_blocks/data`` blocks of
+    the shared pool, scaling KV capacity with the replica count — and
+    the per-slot write positions split with the slots.  State leaves use
+    the cache rule directly (batch = ``n_slots``), which already places
+    their batch dim on the DP ("data") axes."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.distributed import sharding as shd
 
     msize = shd.axis_size(mesh, ("model",))
+    dsize = (shd.axis_size(mesh, ("data",))
+             if "data" in mesh.axis_names else 1)
 
-    def pool_spec(shape, reserved):
+    def pool_spec(shape, b_ax):
+        spec: list = [None] * len(shape)
+        if dsize > 1 and shape[b_ax] % dsize == 0:
+            spec[b_ax] = "data"
+        reserved = {b_ax, b_ax + 1}
         cand = [i for i, d in enumerate(shape)
                 if i not in reserved and d % msize == 0 and d >= msize > 1]
         mdim = max(cand, key=lambda i: shape[i]) if cand else -1
-        spec = ["model" if i == mdim else None for i in range(len(shape))]
+        if mdim >= 0:
+            spec[mdim] = "model"
         while spec and spec[-1] is None:
             spec.pop()
         return NamedSharding(mesh, P(*spec))
@@ -315,9 +327,11 @@ def paged_cache_specs(paged_shapes: PagedCache, layout: PagedLayout, mesh,
             out.append(jax.tree_util.tree_leaves(shd.cache_specs(
                 leaf, mesh, layout.n_slots, policy))[0])
         else:
-            out.append(pool_spec(leaf.shape, {b_ax, b_ax + 1}))
+            out.append(pool_spec(leaf.shape, b_ax))
     pools = jax.tree_util.tree_unflatten(layout.treedef, out)
-    return PagedCache(pools, NamedSharding(mesh, P()))
+    pos_spec = P("data") if (dsize > 1
+                             and layout.n_slots % dsize == 0) else P()
+    return PagedCache(pools, NamedSharding(mesh, pos_spec))
 
 
 def required_blocks(n_positions: int, layout: PagedLayout) -> int:

@@ -37,6 +37,15 @@ dense view each decode block consumes is bit-identical to the contiguous
 cache the slot batcher holds — paged output streams match the slot
 batcher token-for-token (tests/test_paged.py pins this, ragged lengths,
 EOS, budgets, meshes included).
+
+On a 2D ``data x model`` serving mesh (DESIGN.md §13) the scheduler's
+device state follows :func:`repro.serve.kv.paged_cache_specs`: pool
+block-id dims and per-slot positions split over "data", dense state
+leaves put their slot dim on the DP axes, and the block tables stay
+host-side (replicated on device per call).  The control loop is
+unchanged — block placement is a host decision either way — and token
+streams stay bit-identical to the unmeshed scheduler
+(tests/test_stream_overlap.py pins the data-sharded case).
 """
 from __future__ import annotations
 
@@ -101,6 +110,15 @@ class PagedScheduler:
         self.alloc = kv.BlockAllocator(self.layout.num_blocks)
         self.paged = kv.init_paged_cache(self.layout)
         if self.engine.mesh is not None:
+            dsize = int(dict(self.engine.mesh.shape).get("data", 1))
+            if dsize > 1 and n_slots % dsize:
+                import warnings
+                warnings.warn(
+                    f"n_slots={n_slots} is not divisible by the mesh "
+                    f"'data' axis ({dsize}): slot state and positions "
+                    f"replicate instead of sharding — size the slot pool "
+                    f"as a multiple of data for the intended capacity",
+                    stacklevel=2)
             specs = kv.paged_cache_specs(
                 jax.eval_shape(lambda: self.paged), self.layout,
                 self.engine.mesh, serve_cfg.shard_policy)
