@@ -53,12 +53,14 @@ Quick start::
 """
 from repro.core.datapath import Postreduce, fold_batchnorm
 
-from .context import (ExecContext, MvmRecord, adc_noise, energy_summary,
-                      override, pad_positions, trace, vmapped)
+from .context import (ExecContext, MvmRecord, Trace, adc_noise,
+                      energy_summary, override, pad_positions, trace,
+                      vmapped)
 from .dispatch import matmul
 from .policy import DIGITAL, PrecisionPolicy
-from .program import (CimaImage, CimaProgram, ProgramManager, build_program,
-                      install_program, strip_program)
+from .program import (CimaImage, CimaProgram, ImageFootprint, Placement,
+                      ProgramManager, build_program, install_program,
+                      model_footprint, plan_allocation, strip_program)
 from .registry import get_backend, list_backends, register_backend
 from .spec import ExecSpec
 
@@ -66,10 +68,11 @@ from . import backends as _backends  # noqa: F401  (registers built-ins)
 
 __all__ = [
     "ExecSpec", "PrecisionPolicy", "DIGITAL", "ExecContext", "MvmRecord",
-    "Postreduce", "fold_batchnorm",
+    "Trace", "Postreduce", "fold_batchnorm",
     "matmul", "override", "trace", "vmapped", "adc_noise", "pad_positions",
     "energy_summary",
     "register_backend", "get_backend", "list_backends",
-    "CimaImage", "CimaProgram", "ProgramManager", "build_program",
-    "install_program", "strip_program",
+    "CimaImage", "CimaProgram", "ImageFootprint", "Placement",
+    "ProgramManager", "build_program", "install_program",
+    "model_footprint", "plan_allocation", "strip_program",
 ]

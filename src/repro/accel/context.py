@@ -157,6 +157,28 @@ class MvmRecord:
     # ``sparsity`` argument.
     planes_skipped: Optional[int] = None
     planes_total: Optional[int] = None
+    # the ambient vmapped()/scan scale product at record time (scanned
+    # layers x experts visible to this dispatch).  ``calls`` and ``loads``
+    # are already multiplied by it; the tuner's repricer needs the raw
+    # factor to reconstruct how many image-copy reloads this dispatch
+    # WOULD charge if a candidate allocation streamed its image
+    # (loads-if-streamed == copies, exactly what the traced ``loads``
+    # equals whenever the image actually streamed).
+    copies: int = 1
+
+
+class Trace(list):
+    """The record buffer a :func:`trace` scope yields: a plain list of
+    :class:`MvmRecord` plus the VDD corner the run was traced *for*.
+
+    Carrying the corner on the buffer threads it from the one place a
+    run's operating point is decided (the ``trace(vdd=...)`` call) into
+    :func:`energy_summary`, instead of every pricing call re-defaulting
+    it independently."""
+
+    def __init__(self, vdd: Optional[float] = None):
+        super().__init__()
+        self.vdd = vdd
 
 
 _TRACE_STACK: list[list] = []
@@ -164,9 +186,19 @@ _CALL_SCALE_STACK: list[int] = []
 
 
 @contextlib.contextmanager
-def trace() -> Iterator[list]:
-    """Collect an :class:`MvmRecord` per dispatched matmul in this scope."""
-    buf: list = []
+def trace(vdd: Optional[float] = None) -> Iterator[Trace]:
+    """Collect an :class:`MvmRecord` per dispatched matmul in this scope.
+
+    ``vdd`` (optional) stamps the supply corner the run targets onto the
+    yielded :class:`Trace`; :func:`energy_summary` then prices at that
+    corner without the caller re-passing it.  Validated against the
+    chip's measured corners up front.
+    """
+    if vdd is not None:
+        from repro.core.energy import validate_vdd
+
+        validate_vdd(vdd)
+    buf = Trace(vdd=vdd)
     _TRACE_STACK.append(buf)
     try:
         yield buf
@@ -200,7 +232,8 @@ def record(rec: MvmRecord) -> None:
     # later instance's load hides behind the previous instance's compute
     for n in _CALL_SCALE_STACK:
         rec = dataclasses.replace(rec, calls=rec.calls * n,
-                                  loads=rec.loads * n)
+                                  loads=rec.loads * n,
+                                  copies=rec.copies * n)
     for buf in _TRACE_STACK:
         buf.append(rec)
 
@@ -286,9 +319,14 @@ def current_pad_mask():
     return _PAD_STACK[-1] if _PAD_STACK else None
 
 
-def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
-                   readout: str = "adc") -> dict:
+def energy_summary(records, vdd: Optional[float] = None,
+                   sparsity: float = 0.0, readout: str = "adc") -> dict:
     """Chip-model cost of a traced run, from :mod:`repro.core.energy`.
+
+    ``vdd`` resolves in order: an explicit argument, the corner stamped
+    on the :class:`Trace` buffer (``trace(vdd=...)``), then the 0.85 V
+    low-power corner.  Only the chip's measured corners are accepted —
+    anything else raises (there is no interpolation model between them).
 
     ``sparsity`` is the uniform input-sparsity assumption; a record that
     carries its own measured ``MvmRecord.sparsity`` (eager dispatches —
@@ -349,6 +387,11 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
     """
     from repro.core import energy as E
     from .program import segment_cycles, segment_dma_words
+
+    if vdd is None:
+        vdd = getattr(records, "vdd", None)
+        vdd = 0.85 if vdd is None else vdd
+    E.validate_vdd(vdd)
 
     # one definition of the per-segment load cost, shared with the
     # allocator's reload schedule (CimaProgram.reload_cycles_per_pass)
@@ -433,7 +476,8 @@ def energy_summary(records, vdd: float = 0.85, sparsity: float = 0.0,
         row["cycles"] += cyc
         total_pj += pj
         total_cycles += cyc
-    return {"total_pj": total_pj, "total_cycles": total_cycles,
+    return {"vdd": vdd,
+            "total_pj": total_pj, "total_cycles": total_cycles,
             "load_pj": load_pj, "load_cycles": load_cycles,
             "load_cycles_hidden": load_hidden,
             "load_cycles_exposed": load_exposed,

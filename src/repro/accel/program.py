@@ -348,6 +348,108 @@ def _path_str(path: tuple, key) -> str:
     return ".".join(parts)
 
 
+# ----------------------------------------------------- footprints & plans
+
+@dataclasses.dataclass(frozen=True)
+class ImageFootprint:
+    """The policy-independent shape of one managed projection.
+
+    What the bank allocator needs to place an image — and nothing it
+    would have to quantize or decompose bit planes to learn.  A model's
+    footprint list is computed once (:func:`model_footprint`) and
+    re-placed under arbitrary policies/capacities/meshes by
+    :func:`plan_allocation` — the factored allocator the design-space
+    tuner (:mod:`repro.tune`) re-runs per candidate without touching a
+    single weight value.
+    """
+
+    path: str         # param-tree install path (unique program key)
+    tag: str          # policy path the projection resolves under
+    kind: str         # policy kind ("attn", "mlp", ...)
+    n: int            # per-copy contraction rows
+    m: int            # per-copy output columns
+    copies: int = 1   # stacked instances (scanned layers x experts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One allocator decision: where a footprint lands under a policy.
+
+    ``spec`` is the resolved :class:`~repro.accel.spec.ExecSpec` (its
+    ``ba`` sets the tile geometry); ``tiles``/``segments`` are
+    PER-DEVICE shard sizes exactly as :class:`CimaImage` carries them.
+    """
+
+    footprint: ImageFootprint
+    spec: object                       # ExecSpec
+    partition: Optional[str] = None    # "col" | "row" | None
+    devices: int = 1
+    tiles: int = 0
+    segments: int = 0
+    resident: bool = True
+    overlap: bool = False
+    data_shards: int = 1
+
+
+def model_footprint(params, cfg) -> list:
+    """Every policy-managed projection of ``params`` as an
+    :class:`ImageFootprint`, in model (= allocation) order.
+
+    Works on concrete arrays or ``jax.eval_shape`` structs — only
+    ``.shape`` is read.  Policy-independent on purpose: one footprint
+    list serves every candidate policy a tuner sweeps.
+    """
+    out = []
+    for path, key, tag, kind, w in _walk(params, cfg):
+        lead = w.shape[:-2]
+        out.append(ImageFootprint(
+            path=_path_str(path, key), tag=tag, kind=kind,
+            n=int(w.shape[-2]), m=int(w.shape[-1]),
+            copies=int(math.prod(lead)) if lead else 1))
+    return out
+
+
+def plan_allocation(footprints, policy, capacity_chips: Optional[int] = None,
+                    model_shards: int = 1, data_shards: int = 1,
+                    double_buffer: bool = True) -> dict:
+    """First-fit bank allocation of ``footprints`` under ``policy``:
+    ``{path: Placement}`` for every projection the policy routes to a
+    program backend (digital projections are never compiled).
+
+    This is the single allocator — :func:`build_program` compiles images
+    to exactly this plan, and the tuner re-runs it per design point
+    (new ``capacity_chips``/mesh/per-layer precisions) against a fixed
+    footprint list, so re-placement never re-decomposes a bit plane.
+    Placement is first-fit in model order against the PER-DEVICE
+    ``capacity_chips`` budget; whatever exceeds it streams, with
+    ``overlap`` stamped per ``double_buffer``.
+    """
+    plan: dict = {}
+    used = 0
+    for fp in footprints:
+        spec = policy.resolve(fp.tag, kind=fp.kind)
+        if spec.backend not in PROGRAM_BACKENDS:
+            continue
+        part = partition_for(fp.tag, fp.n, fp.m, model_shards)
+        devices = model_shards if part in ("col", "row") else 1
+        n_loc = fp.n // devices if part == "row" else fp.n
+        m_loc = fp.m // devices if part == "col" else fp.m
+        tiles = image_tiles(n_loc, m_loc, spec.ba)
+        segments = image_segments(n_loc, m_loc, spec.ba)
+        need = tiles * fp.copies
+        resident = not (capacity_chips is not None
+                        and used + need > capacity_chips)
+        if resident:
+            used += need
+        plan[fp.path] = Placement(
+            footprint=fp, spec=spec,
+            partition=part if devices > 1 else None, devices=devices,
+            tiles=tiles, segments=segments, resident=resident,
+            overlap=(not resident) and bool(double_buffer),
+            data_shards=max(int(data_shards), 1))
+    return plan
+
+
 # -------------------------------------------------------------- programs
 
 @dataclasses.dataclass
@@ -485,26 +587,29 @@ def build_program(params, cfg, capacity_chips: Optional[int] = None,
         int(dict(mesh.shape).get("model", 1)) if mesh is not None else 1)
     data = int(data_shards) if data_shards is not None else (
         int(dict(mesh.shape).get("data", 1)) if mesh is not None else 1)
+    # one allocator: placement decisions come from the same plan the
+    # tuner re-runs per design point (repro.tune), compilation just
+    # materializes the planned images
+    plan = plan_allocation(model_footprint(params, cfg), cfg.policy,
+                           capacity_chips=capacity_chips,
+                           model_shards=shards, data_shards=data,
+                           double_buffer=double_buffer)
     images: dict = {}
     excluded: list = []
-    used = 0
     for path, key, tag, kind, w in _walk(params, cfg):
-        spec = cfg.policy.resolve(tag, kind=kind)
-        if spec.backend not in PROGRAM_BACKENDS:
+        pstr = _path_str(path, key)
+        pl = plan.get(pstr)
+        if pl is None:
             continue
-        part = partition_for(tag, int(w.shape[-2]), int(w.shape[-1]), shards)
         if shards > 1 and sharding_excluded(tag):
             excluded.append(tag)
-        img = _compile_image(w, spec, _path_str(path, key),
-                             shards=shards, partition=part)
+        img = _compile_image(w, pl.spec, pstr,
+                             shards=shards, partition=pl.partition)
         if data > 1:
             img = dataclasses.replace(img, data_shards=data)
-        need = img.tiles * img.copies
-        if capacity_chips is not None and used + need > capacity_chips:
+        if not pl.resident:
             img = dataclasses.replace(img, resident=False,
-                                      overlap=bool(double_buffer))
-        else:
-            used += need
+                                      overlap=pl.overlap)
         images[img.path] = img
     return CimaProgram(images=images, capacity_tiles=capacity_chips,
                        version=version, model_shards=shards,

@@ -42,6 +42,26 @@ C_A = 24              # DMA cycles to deliver one 768-b row segment
 
 F_CLK = {1.2: 100e6, 0.85: 40e6}
 
+#: The chip's two measured supply corners (Summary table).  Every cost
+#: function validates against this set: the old behaviour of mapping any
+#: ``vdd`` to a table via ``<= 0.85`` silently priced e.g. 1.0 V runs at
+#: the 1.2 V corner's clock.
+VDD_CORNERS = tuple(sorted(F_CLK))
+
+
+def validate_vdd(vdd: float) -> float:
+    """The corner itself, or a clear error for anything unmeasured.
+
+    The paper characterizes exactly two supply corners; there is no
+    interpolation model between them, so accepting other values would
+    silently price a fictional chip.
+    """
+    if vdd not in F_CLK:
+        raise ValueError(
+            f"vdd={vdd!r} is not a measured supply corner; the chip is "
+            f"characterized at {VDD_CORNERS} V only")
+    return vdd
+
 # pJ per unit (Summary table).  Keys: VDD corner.
 ENERGY_PJ = {
     1.2: dict(cpu_instr=52.0, pdmem_32b=96.0, dma_32b=13.5, reshape_32b=35.0,
@@ -116,7 +136,7 @@ def mvm_energy_pj(
     reshape words are NOT discounted: the controller derives the mask
     after the words arrive.
     """
-    e = ENERGY_PJ[vdd]
+    e = ENERGY_PJ[validate_vdd(vdd)]
     rows_frac = min(shape.n, CIMA_ROWS * shape.n_banks) / (CIMA_ROWS * shape.n_banks)
     # per-column-conversion counts: every (bank, bit-column, bit-step)
     conversions = shape.n_banks * shape.m * shape.ba * shape.bx \
@@ -176,12 +196,12 @@ def matrix_load_cycles(rows: int = CIMA_ROWS) -> int:
 def peak_tops_1b(vdd: float = 1.2) -> float:
     """Peak 1-b TOPS (ABN/BNN path) — reproduces the 4.7/1.9 headline."""
     ops = 2.0 * CIMA_ROWS * CIMA_COLS
-    return ops * F_CLK[vdd] / CYCLES_PER_EVAL_ABN / 1e12
+    return ops * F_CLK[validate_vdd(vdd)] / CYCLES_PER_EVAL_ABN / 1e12
 
 
 def peak_tops_per_w_1b(vdd: float = 1.2) -> float:
     """Peak 1-b TOPS/W (ABN path) — reproduces the 152/297 headline."""
-    e = ENERGY_PJ[vdd]
+    e = ENERGY_PJ[validate_vdd(vdd)]
     ops_per_col = 2.0 * CIMA_ROWS
     return ops_per_col / (e["cima_col"] + e["abn_col"])  # (pJ) -> TOPS/W
 
@@ -220,6 +240,7 @@ def network_cost(
     ``overhead_*`` calibrate the non-CIMU work per image (pooling, BN
     bookkeeping, DMA orchestration on the RISC-V core) — see EXPERIMENTS.md.
     """
+    validate_vdd(vdd)
     total_pj = overhead_energy_pj
     total_cycles = overhead_cycles
     for layer in layers:
@@ -228,7 +249,7 @@ def network_cost(
         e = mvm_energy_pj(shape, vdd, sparsity, readout, input_reuse=reuse)
         total_pj += e["total"] * layer.pixels
         total_cycles += mvm_cycles(shape, readout) * layer.pixels
-    f = F_CLK[0.85] if vdd <= 0.85 else F_CLK[1.2]
+    f = F_CLK[vdd]
     return dict(
         energy_uj=total_pj / 1e6,
         cycles=total_cycles,

@@ -128,6 +128,45 @@ class ServeConfig:
                     f"shard_policy.data_shards={declared} but the mesh "
                     f"'data' axis has size {actual}")
 
+    @classmethod
+    def from_tuned(cls, tuned, mesh=None, **kw) -> "ServeConfig":
+        """A ``ServeConfig`` from an auto-tuner choice (:class:`repro.
+        tune.TunedConfig`): the serving-side knobs — bank capacity,
+        double-buffered streaming, mesh shape — land here; the
+        model-side knobs (policy, plane skip, datapath fusion) apply via
+        ``tuned.apply_model(cfg)``.  Extra keywords pass through to the
+        constructor (and may override the tuned values explicitly).
+
+        A tuned mesh wider than 1x1 needs a real ``mesh`` whose
+        ``data``/``model`` axis sizes match the tuned shape (e.g. from
+        ``launch.mesh.make_serve_mesh``) — a silent shape mismatch
+        would serve a different design point than the tuner priced.
+        When the tuned data axis is wider than 1, a matching
+        :class:`~repro.distributed.sharding.ShardPolicy` is attached
+        unless the caller supplies one.
+        """
+        want = (getattr(tuned, "data_shards", 1),
+                getattr(tuned, "model_shards", 1))
+        if want != (1, 1):
+            if mesh is None:
+                raise ValueError(
+                    f"tuned config {getattr(tuned, 'label', '')!r} wants a "
+                    f"{want[0]}x{want[1]} data x model mesh; pass mesh= "
+                    f"(e.g. launch.mesh.make_serve_mesh)")
+            shape = dict(mesh.shape)
+            have = (int(shape.get("data", 1)), int(shape.get("model", 1)))
+            if have != want:
+                raise ValueError(
+                    f"mesh is {have[0]}x{have[1]} data x model but the "
+                    f"tuned config was priced at {want[0]}x{want[1]}")
+        if want[0] > 1 and "shard_policy" not in kw:
+            from repro.distributed.sharding import ShardPolicy
+
+            kw["shard_policy"] = ShardPolicy(data_shards=want[0])
+        kw.setdefault("cima_chips", tuned.capacity_chips)
+        kw.setdefault("stream_double_buffer", tuned.double_buffer)
+        return cls(mesh=mesh, **kw)
+
 
 class Engine:
     def __init__(self, params, cfg, serve_cfg: ServeConfig):

@@ -69,3 +69,30 @@ def test_network_b_cost():
 def test_utilization_pipelining():
     """Fig. 8: C_CIMU typically >= C_x/C_y at multi-bit precisions."""
     assert E.utilization(E.MvmShape(2304, 64, 4, 4)) > 0.85
+
+
+def test_vdd_corner_validation():
+    """Only the two measured corners are priceable; anything else raises
+    (the old code silently mapped e.g. 1.0 V to a corner via <= 0.85)."""
+    assert E.validate_vdd(1.2) == 1.2
+    assert E.validate_vdd(0.85) == 0.85
+    for bad_call in (
+        lambda: E.validate_vdd(1.0),
+        lambda: E.mvm_energy_pj(E.MvmShape(2304, 64, 4, 4), vdd=1.0),
+        lambda: E.peak_tops_1b(0.7),
+        lambda: E.peak_tops_per_w_1b(0.9),
+        lambda: E.network_cost(E.NETWORK_A, 4, 4, vdd=1.1),
+    ):
+        with pytest.raises(ValueError, match="supply corner"):
+            bad_call()
+
+
+def test_network_cost_uses_corner_clock():
+    """Regression for the silent-corner bug: network_cost priced any
+    vdd > 0.85 at the 1.2 V clock.  Cycles are corner-independent and
+    fps must scale exactly with the corner's F_CLK."""
+    hi = E.network_cost(E.NETWORK_A, 4, 4, vdd=1.2, sparsity=0.5)
+    lo = E.network_cost(E.NETWORK_A, 4, 4, vdd=0.85, sparsity=0.5)
+    assert hi["cycles"] == lo["cycles"]
+    assert hi["fps"] / lo["fps"] == pytest.approx(
+        E.F_CLK[1.2] / E.F_CLK[0.85])
