@@ -489,7 +489,7 @@ def run_sharded_scaling(json_path: str = "BENCH_shard.json",
 
 
 def run_stream_overlap(json_path: str = "BENCH_shard.json",
-                       scaling: dict = None, batch: int = 4,
+                       scaling: dict | None = None, batch: int = 4,
                        capacity_chips: int = 2,
                        backend: str = "digital_int") -> dict:
     """Double-buffered vs synchronous reload accounting across

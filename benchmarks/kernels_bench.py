@@ -33,7 +33,7 @@ def run():
         x = jnp.asarray(2 * rng.integers(-4, 5, (bb, n)), jnp.float32)
         w = jnp.asarray(2 * rng.integers(-4, 5, (n, m)), jnp.float32)
         cfg = BpbsConfig(ba=ba, bx=bx)
-        us = time_call(lambda x=x, w=w, cfg=cfg: ops.cima_mvm(
+        us = time_call(lambda x=x, w=w, cfg=cfg, bb=bb, bm=bm: ops.cima_mvm(
             x, w, cfg, block_b=bb, block_m=bm), iters=3, warmup=1)
         flops = 2.0 * bb * n * m * ba * bx
         vmem = cima_vmem_bytes(cfg.bank_n, bb, bm, bx, ba)

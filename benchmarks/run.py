@@ -27,7 +27,7 @@ def main() -> None:
                 kernels_bench, accel_bench):
         try:
             mod.run()
-        except Exception:  # noqa: BLE001
+        except Exception: 
             failures.append(mod.__name__)
             traceback.print_exc()
     if failures:

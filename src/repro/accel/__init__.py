@@ -51,6 +51,7 @@ Quick start::
     with accel.override(backend="digital_int"):   # eval-parity run
         logits, _ = forward(params, tokens, cfg)
 """
+from repro.analysis.sanitize import SanitizeError, sanitize
 from repro.core.datapath import Postreduce, fold_batchnorm
 
 from .context import (ExecContext, MvmRecord, Trace, adc_noise,
@@ -64,7 +65,7 @@ from .program import (CimaImage, CimaProgram, ImageFootprint, Placement,
 from .registry import get_backend, list_backends, register_backend
 from .spec import ExecSpec
 
-from . import backends as _backends  # noqa: F401  (registers built-ins)
+from . import backends as _backends  # registers the built-in backends
 
 __all__ = [
     "ExecSpec", "PrecisionPolicy", "DIGITAL", "ExecContext", "MvmRecord",
@@ -72,6 +73,7 @@ __all__ = [
     "matmul", "override", "trace", "vmapped", "adc_noise", "pad_positions",
     "energy_summary",
     "register_backend", "get_backend", "list_backends",
+    "sanitize", "SanitizeError",
     "CimaImage", "CimaProgram", "ImageFootprint", "Placement",
     "ProgramManager", "build_program", "install_program",
     "model_footprint", "plan_allocation", "strip_program",

@@ -29,11 +29,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitize import active as _san_active
+
 from .context import (ExecContext, MvmRecord, current_override,
                       current_pad_mask, next_noise_key, record,
                       streamed_load_seen, tracing)
 from .registry import get_backend
 from .spec import ExecSpec
+
+
+def _guard_out(y: jax.Array, spec: ExecSpec) -> jax.Array:
+    """Sanitizer NaN/Inf guard on the dispatch output (eager only)."""
+    san = _san_active()
+    if san is not None:
+        san.check_finite(y, f"accel.matmul[{spec.tag or spec.backend}] "
+                            f"output")
+    return y
 
 
 def _strip_pad(x: jax.Array) -> jax.Array:
@@ -212,6 +223,12 @@ def matmul(
         ctx = ExecContext(key=next_noise_key())
     if image is not None:
         ctx = dataclasses.replace(ctx, image=image)
+    san = _san_active()
+    if san is not None:
+        where = spec.tag or spec.backend
+        san.observe_dispatch(spec, ctx)
+        san.check_finite(x, f"accel.matmul[{where}] input")
+        san.check_finite(w, f"accel.matmul[{where}] weight")
     if spec.is_digital:
         # digital computes at the caller's dtype and takes no STE wrapper,
         # but still goes through the registry so a re-registered "digital"
@@ -220,7 +237,7 @@ def matmul(
         dt = dtype or x.dtype
         if post is not None:
             ctx = dataclasses.replace(ctx, post=post)
-        return fn(x.astype(dt), w.astype(dt), spec, ctx)
+        return _guard_out(fn(x.astype(dt), w.astype(dt), spec, ctx), spec)
     xf = x.astype(jnp.float32)
     wf = w.astype(jnp.float32)
 
@@ -239,7 +256,7 @@ def matmul(
             return dx, dw
 
         _op.defvjp(_fwd, _bwd)
-        return _op(xf, wf)
+        return _guard_out(_op(xf, wf), spec)
 
     # fused-epilogue path: the primal runs the backend WITH ctx.post (the
     # kernel-fused forward); differentiation runs matmul-then-epilogue —
@@ -268,4 +285,4 @@ def matmul(
         return (dx, dw, *gpa)
 
     _opf.defvjp(_fwd, _bwd)
-    return _opf(xf, wf, *pargs)
+    return _guard_out(_opf(xf, wf, *pargs), spec)

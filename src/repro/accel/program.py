@@ -596,7 +596,7 @@ def build_program(params, cfg, capacity_chips: Optional[int] = None,
                            double_buffer=double_buffer)
     images: dict = {}
     excluded: list = []
-    for path, key, tag, kind, w in _walk(params, cfg):
+    for path, key, tag, _kind, w in _walk(params, cfg):
         pstr = _path_str(path, key)
         pl = plan.get(pstr)
         if pl is None:

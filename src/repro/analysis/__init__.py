@@ -1,0 +1,28 @@
+"""``repro.analysis`` — the stack's mechanical invariant enforcement.
+
+Two halves:
+
+* a static, call-graph-aware linter (``python -m repro.analysis src
+  tests benchmarks``) whose rules encode the repo's prose invariants —
+  host-sync discipline on the decode hot path, PRNG-key hygiene,
+  record-outside-shard_map, frozen specs, the single dispatch entry
+  point (see :data:`repro.analysis.findings.RULES`);
+* an opt-in runtime sanitizer scope (:func:`repro.analysis.sanitize.
+  sanitize`, re-exported as ``accel.sanitize``) that checks the same
+  contract dynamically: NaN/Inf at backend boundaries, ADC saturation
+  and B_y overflow counters, BlockAllocator leak audits, VDD-corner
+  validity.  The tier-1 suite runs under it via ``pytest --sanitize``.
+
+The lint half is pure stdlib (ast); the sanitizer imports jax only, so
+every hook site in :mod:`repro.core`/:mod:`repro.accel`/:mod:`repro.
+serve` can import this package without cycles.
+"""
+from .findings import Finding, RULES, explain
+from .runner import lint_paths, lint_source
+from .sanitize import SanitizeError, Sanitizer, SanitizerStats, active, \
+    sanitize
+
+__all__ = [
+    "Finding", "RULES", "explain", "lint_paths", "lint_source",
+    "SanitizeError", "Sanitizer", "SanitizerStats", "active", "sanitize",
+]

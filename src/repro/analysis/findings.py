@@ -1,0 +1,215 @@
+"""Finding records, the rule catalog, and inline suppressions.
+
+Every rule has a stable code, a one-line summary, the repo invariant it
+mechanically enforces (with the DESIGN.md anchor), and a fix-it message.
+``--explain CODE`` prints the full entry; findings print the short form.
+
+Suppressions are inline comments::
+
+    toks = np.asarray(toks)  # accel-lint: allow[JAX01] the ONE documented sync
+
+The reason text after the bracket is REQUIRED — a bare ``allow[CODE]``
+is itself reported (LNT00).  A suppression covers its own line and, when
+it is a standalone comment line, the next code line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.code} {self.message}"
+
+    def fingerprint(self) -> str:
+        """Baseline identity: stable across unrelated edits elsewhere in
+        the file would be nicer, but line-keyed is enough for a findings
+        snapshot that is expected to stay empty."""
+        return f"{self.path}:{self.line}:{self.code}"
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleDoc:
+    code: str
+    title: str
+    invariant: str
+    fixit: str
+
+
+RULES: dict[str, RuleDoc] = {r.code: r for r in [
+    RuleDoc(
+        "JAX01", "host sync on the accelerator hot path",
+        "Host-sync primitives (np.asarray on device values, .item(), "
+        "int()/float()/bool() on arrays, .block_until_ready()) must not "
+        "appear inside jit-traced call graphs (they constant-fold or "
+        "raise at trace time) nor inside the loops of functions that "
+        "drive jitted callables: serving's contract is ONE host sync per "
+        "decode block (DESIGN.md §11), and every extra blocking read "
+        "serializes decode dispatch.",
+        "Batch the read (sync once per block, not per step) or route a "
+        "deliberate sync through repro.serve.host.host_sync(x, "
+        "reason=...) so the stall is audited; suppress only the "
+        "documented per-block sync."),
+    RuleDoc(
+        "JAX02", "PRNG key reused by two consumers",
+        "A PRNG key may feed exactly one consumer; every further draw "
+        "must go through fold_in/split first.  Serving derives sampling "
+        "keys as fold_in(fold_in(key, request_id), step) so streams are "
+        "batch-composition independent (DESIGN.md §11) — reusing a key "
+        "correlates draws that must be independent.",
+        "Derive a fresh key per consumer: k1, k2 = jax.random.split(key) "
+        "or key = jax.random.fold_in(key, i) inside the loop."),
+    RuleDoc(
+        "JAX03", "Python branch on a traced value",
+        "Python if/while/assert on the value of a jnp/jax expression "
+        "inside a jit-traced call graph raises a TracerBoolConversion "
+        "at trace time (or silently freezes the branch when the value "
+        "is concrete at trace and traced later).  Control flow on "
+        "traced values must use lax.cond/select/while_loop.",
+        "Use jnp.where / lax.cond / lax.while_loop, or hoist the "
+        "decision to static config."),
+    RuleDoc(
+        "JAX04", "device array built at module import time",
+        "Module-scope jnp.* construction allocates on the default "
+        "device at import, before the process picks a platform, mesh or "
+        "sharding — it breaks JAX_PLATFORMS overrides, pins memory for "
+        "code that may never run, and couples import order to device "
+        "state.  Library modules must build arrays lazily.",
+        "Move the construction into the function that uses it (or a "
+        "cached factory); keep module scope to Python/numpy constants."),
+    RuleDoc(
+        "ACC01", "trace record emitted inside a shard_map body",
+        "MvmRecords are emitted LOGICALLY, exactly once, outside "
+        "shard_map (DESIGN.md §9): the record describes the whole "
+        "matmul, and energy_summary derives per-device work from its "
+        "devices/partition annotations.  Emitting inside the body "
+        "records once per shard — double-counting energy and cycles.",
+        "Emit the record before entering shard_map (see "
+        "accel.dispatch._record_mvm); the body must stay record-free."),
+    RuleDoc(
+        "ACC02", "backend/kernel called around the dispatch entry point",
+        "accel.matmul is the single entry point every projection goes "
+        "through: it resolves the policy spec, applies scoped overrides, "
+        "validates compiled images, and records the MVM for the energy "
+        "trace.  Direct calls into accel.backends or repro.kernels from "
+        "model/serving/tuning code bypass all four (tests and "
+        "benchmarks exercise backends directly on purpose and are "
+        "exempt by path).",
+        "Call repro.accel.matmul(x, w, spec, ...) and let dispatch "
+        "route to the backend."),
+    RuleDoc(
+        "ACC03", "mutation of a frozen execution spec",
+        "ExecSpec, Postreduce and CimaImage are value objects: specs "
+        "are hashable policy keys, images are compile-time snapshots "
+        "validated against the resolved spec, and epilogues cross jit "
+        "boundaries as pytrees.  In-place mutation (attribute "
+        "assignment or object.__setattr__ outside __post_init__) "
+        "desynchronizes them from every cached jit that closed over "
+        "the old value.",
+        "Build a new value with dataclasses.replace(spec, ...) (or "
+        "spec.with_(...)); never assign fields in place."),
+    RuleDoc(
+        "ACC04", "deprecated policy API",
+        "set_policy()/get_policy() mutated a module-global default "
+        "ShardPolicy, so a training run and a live serving engine "
+        "clobbered each other's distribution mode.  The policy is now "
+        "a value threaded explicitly (ServeConfig.shard_policy, "
+        "autoshard.set_mesh(mesh, policy)); the globals are gone.",
+        "Construct ShardPolicy(...) and pass it through the config "
+        "path that reaches your call site."),
+    RuleDoc(
+        "LNT00", "malformed suppression",
+        "Every accel-lint suppression must name a known rule code and "
+        "carry a non-empty reason string — an unexplained allow is "
+        "indistinguishable from a stale one.",
+        "Write `# accel-lint: allow[CODE] why this site is exempt`."),
+]}
+
+
+def explain(code: str) -> str:
+    doc = RULES.get(code.upper())
+    if doc is None:
+        known = ", ".join(sorted(RULES))
+        return f"unknown rule code {code!r}; known: {known}"
+    return (f"{doc.code} — {doc.title}\n\n"
+            f"Invariant:\n  {doc.invariant}\n\n"
+            f"Fix:\n  {doc.fixit}\n")
+
+
+# ---------------------------------------------------------- suppressions
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*accel-lint:\s*allow\[(?P<code>[A-Za-z0-9_,\s]*)\](?P<reason>.*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    line: int          # the line the comment sits on
+    codes: tuple
+    reason: str
+    standalone: bool   # comment-only line: also covers the next code line
+
+    def covers(self, code: str, line: int) -> bool:
+        if code not in self.codes:
+            return False
+        if line == self.line:
+            return True
+        return self.standalone and line == self.line + 1
+
+
+def scan_suppressions(source: str, path: str
+                      ) -> tuple[list[Suppression], list[Finding]]:
+    """All suppression comments in ``source`` plus LNT00 findings for the
+    malformed ones (unknown code / missing reason)."""
+    sups: list[Suppression] = []
+    bad: list[Finding] = []
+    try:
+        tokens = list(tokenize.generate_tokens(
+            io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return [], []
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _SUPPRESS_RE.search(tok.string)
+        if not m:
+            continue
+        i = tok.start[0]
+        codes = tuple(c.strip().upper() for c in m.group("code").split(",")
+                      if c.strip())
+        reason = m.group("reason").strip()
+        unknown = [c for c in codes if c not in RULES]
+        col = tok.start[1]
+        if not codes or unknown:
+            bad.append(Finding("LNT00", path, i, col,
+                               f"suppression names unknown rule code(s) "
+                               f"{unknown or '[]'}"))
+            continue
+        if not reason:
+            bad.append(Finding("LNT00", path, i, col,
+                               f"suppression allow[{','.join(codes)}] has no "
+                               f"reason string"))
+            continue
+        standalone = tok.line[:col].strip() == ""
+        sups.append(Suppression(i, codes, reason, standalone))
+    return sups, bad
+
+
+def apply_suppressions(findings: list[Finding],
+                       sups: list[Suppression]) -> list[Finding]:
+    out = []
+    for f in findings:
+        if f.code == "LNT00" or not any(
+                s.covers(f.code, f.line) for s in sups):
+            out.append(f)
+    return out

@@ -1,0 +1,224 @@
+"""Opt-in runtime sanitizer for the accel stack.
+
+``accel.sanitize()`` opens a scope during which the stack's boundaries
+self-check:
+
+* **NaN/Inf guards** — every *eager* value crossing the
+  ``accel.matmul`` dispatch boundary (inputs, weights, outputs) and
+  every array pulled to the host through
+  :func:`repro.serve.host.host_sync` is checked finite.  The host_sync
+  check is what gives jit-compiled decode paths coverage: the fetched
+  token block is the compiled computation's output.
+* **ADC saturation counter** — the fraction of eager
+  :func:`repro.core.adc.adc_convert` codes landing on the top code
+  (clipped charge-share range, the analog analog of int overflow).
+* **B_y overflow counter** — the fraction of values entering the
+  datapath's :func:`repro.core.datapath.saturate` stage that exceed the
+  B_y word and get clipped (paper Fig. 8's output-word rule).
+* **Allocator audit** — :meth:`audit_allocator` proves the paged-KV
+  :class:`~repro.serve.kv.BlockAllocator` drained at scheduler
+  shutdown (leaked blocks = requests retired without freeing their
+  tables); double-frees already raise in the allocator itself.
+* **VDD-corner validity** — ``sanitize(vdd=0.85)`` pins the supply
+  corner: it must be a modeled corner (``SIGMA_LSB_CORNER``), and any
+  noise-modeling spec dispatched inside the scope must carry at least
+  that corner's sigma — a 0.85 V run claiming 1.2 V noise is a silently
+  optimistic robustness result.
+
+Hard violations (non-finite values, allocator leaks, unknown corner,
+``require_noise_key=True`` with no key in scope) raise
+:class:`SanitizeError` at the offending call.  Rates (saturation,
+overflow, corner mismatches) accumulate on :class:`SanitizerStats` and
+only fail the scope when a ``*_limit`` threshold is set.
+
+This module sits in :mod:`repro.analysis` but imports no other repro
+module at import time, so the hook sites (``accel.dispatch``,
+``core.adc``, ``core.datapath``, ``serve``) can import it without
+cycles.  The whole tier-1 suite runs under a scope via
+``pytest --sanitize``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+class SanitizeError(RuntimeError):
+    """A sanitizer invariant was violated."""
+
+
+@dataclasses.dataclass
+class SanitizerStats:
+    finite_checks: int = 0
+    dispatches: int = 0
+    adc_conversions: int = 0      # eager code decisions observed
+    adc_saturated: int = 0        # of which landed on the top code
+    by_values: int = 0            # eager values through saturate()
+    by_overflowed: int = 0        # of which exceeded the B_y word
+    corner_mismatches: int = 0
+    allocator_audits: int = 0
+
+    @property
+    def adc_saturation_rate(self) -> float:
+        return self.adc_saturated / max(self.adc_conversions, 1)
+
+    @property
+    def by_overflow_rate(self) -> float:
+        return self.by_overflowed / max(self.by_values, 1)
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+@dataclasses.dataclass(eq=False)        # identity eq: scopes nest by object
+class Sanitizer:
+    """One active ``sanitize()`` scope."""
+
+    vdd: Optional[float] = None
+    require_noise_key: bool = False
+    adc_saturation_limit: Optional[float] = None
+    by_overflow_limit: Optional[float] = None
+    stats: SanitizerStats = dataclasses.field(default_factory=SanitizerStats)
+
+    # -------------------------------------------------------------- checks
+
+    def check_finite(self, x, where: str) -> None:
+        # All math on the HOST (numpy): an active jit trace stages jnp
+        # ops even over concrete operands, which would both break the
+        # trace and silently defer the check.
+        if x is None or not _is_concrete(x):
+            return
+        try:
+            arr = np.asarray(x)
+        except (TypeError, ValueError):
+            return
+        if not np.issubdtype(arr.dtype, np.floating) and not \
+                np.issubdtype(arr.dtype, np.complexfloating):
+            return
+        self.stats.finite_checks += 1
+        finite = np.isfinite(arr)
+        if not finite.all():
+            bad = int((~finite).sum())
+            raise SanitizeError(
+                f"sanitize: {bad} non-finite value(s) at {where} "
+                f"(shape {tuple(arr.shape)})")
+
+    def observe_dispatch(self, spec, ctx) -> None:
+        self.stats.dispatches += 1
+        sigma = getattr(spec, "adc_sigma_lsb", 0.0)
+        if self.require_noise_key and sigma and \
+                getattr(ctx, "key", None) is None:
+            raise SanitizeError(
+                f"sanitize(require_noise_key=True): spec "
+                f"{getattr(spec, 'tag', '') or spec.backend!r} models "
+                f"adc_sigma_lsb={sigma} but no noise key reached the "
+                f"dispatch; wrap the call in accel.adc_noise(key)")
+        if self.vdd is not None and not getattr(spec, "is_digital", False) \
+                and not getattr(spec, "ideal_adc", False):
+            corner = self._corner_sigma()
+            if sigma < corner:
+                self.stats.corner_mismatches += 1
+
+    def _corner_sigma(self) -> float:
+        from repro.core.adc import SIGMA_LSB_CORNER
+
+        if self.vdd not in SIGMA_LSB_CORNER:
+            raise SanitizeError(
+                f"sanitize(vdd={self.vdd}): not a modeled supply corner; "
+                f"known corners: {sorted(SIGMA_LSB_CORNER)}")
+        return SIGMA_LSB_CORNER[self.vdd]
+
+    def observe_adc(self, codes, cmax: float) -> None:
+        if not _is_concrete(codes):
+            return
+        arr = np.asarray(codes)
+        self.stats.adc_conversions += int(arr.size)
+        self.stats.adc_saturated += int((arr >= cmax).sum())
+
+    def observe_by(self, y, bits: int) -> None:
+        if not _is_concrete(y):
+            return
+        arr = np.asarray(y)
+        hi = 2.0 ** (bits - 1) - 1
+        self.stats.by_values += int(arr.size)
+        self.stats.by_overflowed += int(
+            ((arr > hi) | (arr < -(hi + 1))).sum())
+
+    def audit_allocator(self, alloc, where: str = "shutdown") -> None:
+        self.stats.allocator_audits += 1
+        held = sorted(getattr(alloc, "_held", ()))
+        if alloc.available != alloc.num_blocks or held:
+            raise SanitizeError(
+                f"sanitize: BlockAllocator leaked {len(held)} block(s) at "
+                f"{where}: {held[:16]}{'...' if len(held) > 16 else ''} "
+                f"({alloc.available}/{alloc.num_blocks} free)")
+
+    def _check_limits(self) -> None:
+        s = self.stats
+        if self.adc_saturation_limit is not None and \
+                s.adc_saturation_rate > self.adc_saturation_limit:
+            raise SanitizeError(
+                f"sanitize: ADC saturation rate "
+                f"{s.adc_saturation_rate:.3f} exceeds limit "
+                f"{self.adc_saturation_limit} ({s.adc_saturated}/"
+                f"{s.adc_conversions} codes on the top code); the "
+                f"charge-share range is clipping — raise adc_bits or "
+                f"enable adaptive_range")
+        if self.by_overflow_limit is not None and \
+                s.by_overflow_rate > self.by_overflow_limit:
+            raise SanitizeError(
+                f"sanitize: B_y overflow rate {s.by_overflow_rate:.3f} "
+                f"exceeds limit {self.by_overflow_limit} "
+                f"({s.by_overflowed}/{s.by_values} values clipped); the "
+                f"recombined sum outgrows the Fig. 8 output word")
+
+
+_STACK = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_STACK, "scopes"):
+        _STACK.scopes = []
+    return _STACK.scopes
+
+
+def active() -> Optional[Sanitizer]:
+    """The innermost active sanitizer scope, or None."""
+    scopes = _stack()
+    return scopes[-1] if scopes else None
+
+
+class sanitize:
+    """Context manager opening a sanitizer scope (see module docstring).
+
+    ::
+
+        with accel.sanitize(vdd=0.85, adc_saturation_limit=0.25) as san:
+            logits, _ = forward(params, tokens, cfg)
+        print(san.stats.adc_saturation_rate)
+    """
+
+    def __init__(self, *, vdd: Optional[float] = None,
+                 require_noise_key: bool = False,
+                 adc_saturation_limit: Optional[float] = None,
+                 by_overflow_limit: Optional[float] = None):
+        self.sanitizer = Sanitizer(
+            vdd=vdd, require_noise_key=require_noise_key,
+            adc_saturation_limit=adc_saturation_limit,
+            by_overflow_limit=by_overflow_limit)
+
+    def __enter__(self) -> Sanitizer:
+        if self.sanitizer.vdd is not None:
+            self.sanitizer._corner_sigma()    # unknown corner fails fast
+        _stack().append(self.sanitizer)
+        return self.sanitizer
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        _stack().remove(self.sanitizer)
+        if exc_type is None:
+            self.sanitizer._check_limits()

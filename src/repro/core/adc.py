@@ -26,6 +26,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitize import active as _san_active
+
 # Modeled residual analog non-ideality per VDD corner, in ADC LSB units.
 # Fig. 10's measured column transfer functions bound the deviation to a
 # fraction of an LSB; the 0.85 V corner (297 1b-TOPS/W) runs the charge
@@ -70,7 +72,13 @@ def adc_convert(
                                                   dtype=jnp.float32)
         else:
             _warn_keyless_noise(sigma_lsb, "adc_convert")
-    return jnp.clip(jnp.round(x), 0.0, cmax)
+    codes = jnp.clip(jnp.round(x), 0.0, cmax)
+    san = _san_active()
+    if san is not None:
+        # eager-only saturation-rate counter: codes pinned to the top
+        # code mean the charge-share range clipped (sanitizer contract)
+        san.observe_adc(codes, cmax)
+    return codes
 
 
 def adc_reconstruct(

@@ -28,6 +28,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitize import active as _san_active
+
 
 def output_bits(bx: int, ba: int) -> int:
     """B_y as set by the near-memory datapath (paper Fig. 8)."""
@@ -36,6 +38,11 @@ def output_bits(bx: int, ba: int) -> int:
 
 def saturate(y: jax.Array, bits: int) -> jax.Array:
     hi = 2.0 ** (bits - 1) - 1
+    san = _san_active()
+    if san is not None:
+        # eager-only overflow counter: values clipped here outgrew the
+        # Fig. 8 B_y output word (sanitizer contract)
+        san.observe_by(y, bits)
     return jnp.clip(y, -(hi + 1), hi)
 
 

@@ -5,10 +5,10 @@ from .autoshard import (cs, get_mesh, get_shard_policy, manual,
 from .sharding import (ShardPolicy, batch_specs, cache_specs, param_specs,
                        state_specs)
 
-# NOTE: sharding.DEFAULT_POLICY is deliberately NOT re-exported: the
-# deprecated set_policy() shim rebinds it, and a by-value re-export would
-# go stale.  Read it live via repro.distributed.sharding.DEFAULT_POLICY
-# (or better: thread an explicit ShardPolicy).
+# NOTE: sharding.DEFAULT_POLICY is an immutable module constant (the
+# deprecated mutable-global shims are gone); it is still not re-exported
+# here — thread an explicit ShardPolicy instead of reaching for a
+# default.
 __all__ = [
     "ShardPolicy", "param_specs", "batch_specs", "cache_specs",
     "state_specs", "cs", "get_mesh", "get_shard_policy", "manual",

@@ -17,7 +17,6 @@ Layout conventions (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Optional, Sequence
 
 import jax
@@ -82,30 +81,17 @@ class ShardPolicy:
         return tuple(a for a in ("data",) if a in mesh.axis_names)
 
 
+# Immutable module constant — the policy used when a caller passes none.
+# There is deliberately NO mutable-global setter: a training run and a
+# live serving engine must not be able to clobber each other's
+# distribution mode.  Thread an explicit ShardPolicy instead
+# (ServeConfig.shard_policy, autoshard.set_mesh(mesh, policy)).
 DEFAULT_POLICY = ShardPolicy("2d")
 
 
 def resolve_policy(policy: Optional[ShardPolicy]) -> ShardPolicy:
-    """``policy`` if given, else the (deprecated-shim-mutable) default."""
+    """``policy`` if given, else the immutable module default."""
     return DEFAULT_POLICY if policy is None else policy
-
-
-def set_policy(policy: str):
-    """DEPRECATED: mutate the module default.  Pass an explicit
-    :class:`ShardPolicy` via the ``policy=`` kwarg / configs instead."""
-    global DEFAULT_POLICY
-    warnings.warn("set_policy() is deprecated; pass ShardPolicy(policy) "
-                  "explicitly (e.g. ServeConfig.shard_policy, "
-                  "autoshard.set_mesh(mesh, policy))", DeprecationWarning,
-                  stacklevel=2)
-    DEFAULT_POLICY = ShardPolicy(policy)
-
-
-def get_policy() -> str:
-    """DEPRECATED: the module-default policy mode."""
-    warnings.warn("get_policy() is deprecated; thread a ShardPolicy "
-                  "explicitly", DeprecationWarning, stacklevel=2)
-    return DEFAULT_POLICY.mode
 
 
 def axis_size(mesh: Mesh, axes) -> int:

@@ -240,7 +240,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         cost = {k: float(v) for k, v in ca.items()
                 if isinstance(v, (int, float)) and (
                     "flops" in k or "bytes" in k or "utilization" in k)}
-    except Exception as e:  # noqa: BLE001
+    except Exception as e: 
         cost = {"error": str(e)}
     mem = {}
     try:
@@ -250,7 +250,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                      "alias_size_in_bytes"):
             if hasattr(ma, attr):
                 mem[attr] = int(getattr(ma, attr))
-    except Exception as e:  # noqa: BLE001
+    except Exception as e: 
         mem = {"error": str(e)}
 
     text = compiled.as_text()
@@ -312,7 +312,7 @@ def main():
     if args.all:
         from repro.launch.shapes import all_cells
         failures = []
-        for arch, shape_name, ok, reason in all_cells():
+        for arch, shape_name, _ok, _reason in all_cells():
             pods = ["no", "yes"] if args.multi_pod == "both" else \
                 [args.multi_pod]
             for mp in pods:

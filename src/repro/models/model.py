@@ -44,17 +44,19 @@ def init_params(cfg, key, max_seq: int = 32768) -> dict:
         enc_cfg = dataclasses.replace(cfg, n_layers=cfg.enc_layers,
                                       block_pattern=(), causal=False)
         p["encoder"] = {
-            "stack": tfm.init_stack(k_enc, enc_cfg),
-            "final_norm": init_norm(k_enc, cfg.d_model, cfg.norm),
-            "pos": truncated_normal_init(k_pos, (cfg.frontend_seq,
-                                                 cfg.d_model), 0.02),
+            "stack": tfm.init_stack(jax.random.fold_in(k_enc, 0), enc_cfg),
+            "final_norm": init_norm(jax.random.fold_in(k_enc, 1),
+                                    cfg.d_model, cfg.norm),
+            "pos": truncated_normal_init(jax.random.fold_in(k_pos, 0),
+                                         (cfg.frontend_seq,
+                                          cfg.d_model), 0.02),
         }
         # decoder learned positions (whisper uses learned, not rope)
-        p["dec_pos"] = truncated_normal_init(k_pos, (max_seq, cfg.d_model),
-                                             0.02)
+        p["dec_pos"] = truncated_normal_init(jax.random.fold_in(k_pos, 1),
+                                             (max_seq, cfg.d_model), 0.02)
         # per-decoder-layer cross-attention, scanned
         n = cfg.n_layers
-        keys = jax.random.split(k_enc, n)
+        keys = jax.random.split(jax.random.fold_in(k_enc, 2), n)
         p["cross"] = jax.vmap(
             lambda k_: {
                 "ln": init_norm(k_, cfg.d_model, cfg.norm),

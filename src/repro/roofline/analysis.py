@@ -46,7 +46,7 @@ def _advice(dom: str, rec: dict) -> str:
             "and reduce remat recompute to push useful-ratio toward 1")
 
 
-def load_cells(dryrun_dir: str, mesh: str = None):
+def load_cells(dryrun_dir: str, mesh: str | None = None):
     cells = []
     for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
         with open(path) as f:

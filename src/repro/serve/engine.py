@@ -27,6 +27,8 @@ import numpy as np
 
 from repro.models import decode_step, init_cache, prefill, splice_slot
 
+from .host import host_sync
+
 
 @dataclasses.dataclass
 class ServeConfig:
@@ -315,7 +317,9 @@ class Engine:
                 # ``eos_check_every`` steps (rows already done keep
                 # emitting forced eos in between — outputs are identical
                 # for any interval).
-                if (t - 1) % check == 0 and bool(np.asarray(done).all()):
+                if (t - 1) % check == 0 and bool(host_sync(
+                        done, reason="eos early-exit poll, amortized over "
+                        "eos_check_every decode steps").all()):
                     break
             logits, cache = self._decode(self.params, tok, cache)
             self.last_decode_steps += 1
@@ -324,7 +328,9 @@ class Engine:
                 nxt = jnp.where(done, eos, nxt)
             tok = nxt
             out.append(tok)
-        gen = np.stack([np.asarray(t) for t in out], axis=1)
+        gen = host_sync(jnp.stack(out, axis=1),
+                        reason="end of generate: one batched pull of the "
+                        "whole [B, T] token block")
         if gen.shape[1] < self.scfg.max_new_tokens:
             pad = np.full((b, self.scfg.max_new_tokens - gen.shape[1]),
                           eos, gen.dtype)
@@ -411,7 +417,8 @@ class ContinuousBatcher:
         self.stats["prefills"] += 1
         tok = self.engine.sample(logits, np.asarray([req.rid]),
                                  np.zeros(1, np.int64))
-        return int(np.asarray(tok)[0]), cache
+        return int(host_sync(tok, reason="admission: the first sampled "
+                             "token decides retire-vs-splice")[0]), cache
 
     def run(self, on_token: Optional[Callable[[int, int], None]] = None,
             feed: Optional[Callable[[], bool]] = None
@@ -478,7 +485,9 @@ class ContinuousBatcher:
             self.stats["slot_steps"] += len(active)
             rids = np.asarray([s.rid if s else 0 for s in slots])
             steps = np.asarray([s.n_gen if s else 0 for s in slots])
-            toks = np.asarray(self.engine.sample(logits, rids, steps))
+            toks = host_sync(self.engine.sample(logits, rids, steps),
+                             reason="slot-batcher reference loop: one "
+                             "token sync per decode step by design")
             for i in active:
                 s = slots[i]
                 tok = int(toks[i])

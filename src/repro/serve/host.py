@@ -1,0 +1,38 @@
+"""The audited device→host sync choke point for serving code.
+
+Serving's performance contract is ONE host sync per decode block
+(DESIGN.md §11): every blocking device read serializes decode dispatch,
+so each one must be a deliberate, reviewed decision.  ``host_sync`` is
+how that decision is written down — the linter's JAX01 rule flags raw
+``np.asarray``/``.item()`` pulls on the hot path but accepts a
+``host_sync(x, reason="...")`` whose reason is a non-empty literal, so
+every stall on the decode path is greppable and carries its own
+justification.
+
+The sanitizer hooks here too: an active :func:`repro.analysis.sanitize.
+sanitize` scope checks every synced array finite.  Because the synced
+value is the *output* of the compiled computation, this single eager
+check gives NaN/Inf coverage over the whole jitted decode path that the
+dispatch-boundary guards (eager-only) cannot see into.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.sanitize import active as _san_active
+
+
+def host_sync(x, *, reason: str) -> np.ndarray:
+    """Block on ``x`` and return it as a host ``np.ndarray``.
+
+    ``reason`` must be a non-empty literal string at the call site — it
+    is the documentation the JAX01 lint rule checks for.
+    """
+    if not reason or not reason.strip():
+        raise ValueError("host_sync requires a non-empty reason string "
+                         "documenting why this sync is on the hot path")
+    out = np.asarray(x)
+    san = _san_active()
+    if san is not None:
+        san.check_finite(out, f"host_sync({reason!r})")
+    return out

@@ -188,7 +188,7 @@ def _iter_meta(layout: PagedLayout):
 def init_paged_cache(layout: PagedLayout) -> PagedCache:
     bs, nb = layout.block_size, layout.num_blocks
     leaves = []
-    for b_ax, q_ax, L, shape, dtype in _iter_meta(layout):
+    for b_ax, q_ax, _L, shape, dtype in _iter_meta(layout):
         if q_ax is None:
             leaves.append(jnp.zeros(shape, dtype))
         else:
@@ -230,7 +230,7 @@ def scatter_decode(paged: PagedCache, dense: DecodeCache, tables: jax.Array,
     bs = layout.block_size
     nt_max = (k - 1) // bs + 2
     out = []
-    for pool, dleaf, (b_ax, q_ax, L, shape, _) in zip(
+    for pool, dleaf, (b_ax, q_ax, L, _shape, _) in zip(
             jax.tree_util.tree_leaves(paged.pools),
             jax.tree_util.tree_leaves(dense.layers), _iter_meta(layout)):
         if q_ax is None:
@@ -261,7 +261,7 @@ def splice_request(paged: PagedCache, slot: DecodeCache, i,
     splice at the batch axis like ``splice_slot``."""
     bs = layout.block_size
     out = []
-    for pool, sleaf, (b_ax, q_ax, L, shape, _) in zip(
+    for pool, sleaf, (b_ax, q_ax, L, _shape, _) in zip(
             jax.tree_util.tree_leaves(paged.pools),
             jax.tree_util.tree_leaves(slot.layers), _iter_meta(layout)):
         if q_ax is None:
@@ -320,7 +320,7 @@ def paged_cache_specs(paged_shapes: PagedCache, layout: PagedLayout, mesh,
         return NamedSharding(mesh, P(*spec))
 
     out = []
-    for leaf, (b_ax, q_ax, L, shape, _) in zip(
+    for leaf, (b_ax, q_ax, _L, _shape, _) in zip(
             jax.tree_util.tree_leaves(paged_shapes.pools),
             _iter_meta(layout)):
         if q_ax is None:

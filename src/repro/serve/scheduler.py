@@ -60,8 +60,11 @@ import numpy as np
 
 from repro.models import decode_step, prefill_resume
 
+from repro.analysis.sanitize import active as _san_active
+
 from . import kv
 from .engine import Engine, ServeConfig
+from .host import host_sync
 
 
 @dataclasses.dataclass
@@ -239,8 +242,10 @@ class PagedScheduler:
             req.first_tok = self._emitted[req.rid][-1]
             self._ready = req
             return
-        tok = int(np.asarray(self.engine.sample(
-            logits, np.asarray([req.rid]), np.zeros(1, np.int64)))[0])
+        tok = int(host_sync(self.engine.sample(
+            logits, np.asarray([req.rid]), np.zeros(1, np.int64)),
+            reason="prefill admission: the first token decides "
+            "retire-vs-admit before the slot splice")[0])
         self._emitted[req.rid] = []
         self._emit(req.rid, tok)
         if (self.scfg.eos_id >= 0 and tok == self.scfg.eos_id) \
@@ -360,7 +365,8 @@ class PagedScheduler:
         self.stats["decode_blocks"] += 1
         self.stats["decode_steps"] += K
         self.stats["slot_steps"] += K * len(active)
-        toks = np.asarray(toks)                # [K, B] — the ONE host sync
+        # accel-lint: allow[JAX01] the ONE documented per-block host sync (DESIGN.md §11); K tokens amortize it
+        toks = np.asarray(toks)                # [K, B]
         for i in active:
             s = self.slots[i]
             self._pos_host[i] += K
@@ -409,4 +415,9 @@ class PagedScheduler:
                     continue
                 break
         self._on_token = None
+        san = _san_active()
+        if san is not None:
+            # every request retired and freed its table: the pool must be
+            # whole again (leaks here = rows retired without free())
+            san.audit_allocator(self.alloc, "PagedScheduler.run shutdown")
         return self.results

@@ -77,9 +77,11 @@ def train(cfg, data_cfg: DataConfig, opt_cfg: AdamWConfig,
 
         inner = step_fn
 
-        def step_fn(state, batch):  # noqa: F811 — meshed trace wrapper
+        def _meshed_step(state, batch):
             with autoshard.use_mesh(mesh, shard_policy):
                 return inner(state, batch)
+
+        step_fn = _meshed_step
 
     # ---- init or resume
     latest = ckpt_lib.latest_checkpoint(trainer_cfg.ckpt_dir)

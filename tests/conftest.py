@@ -1,0 +1,32 @@
+"""Shared pytest wiring: the ``--sanitize`` flag.
+
+``pytest --sanitize`` runs every test inside an
+:func:`repro.analysis.sanitize.sanitize` scope, so the whole tier-1
+suite doubles as a dynamic audit of the accel contract: NaN/Inf at the
+dispatch and host_sync boundaries, ADC saturation / B_y overflow
+counters, and BlockAllocator leak audits at scheduler shutdown.  CI's
+fast job runs the suite once this way.
+
+The scope is deliberately permissive (no ``require_noise_key``, no rate
+limits): tests that *probe* clipping or keyless-noise behavior must keep
+passing — the sanitizer's job here is catching hard violations (NaN,
+leaks), not re-deciding what tests may exercise.
+"""
+import pytest
+
+from repro.analysis.sanitize import sanitize
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--sanitize", action="store_true", default=False,
+        help="run every test inside an accel.sanitize() runtime scope")
+
+
+@pytest.fixture(autouse=True)
+def _sanitize_scope(request):
+    if not request.config.getoption("--sanitize"):
+        yield
+        return
+    with sanitize():
+        yield

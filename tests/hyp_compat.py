@@ -8,7 +8,7 @@ without the dependency (the tier-1 CPU container).
 from __future__ import annotations
 
 try:
-    from hypothesis import given, settings, strategies as st  # noqa: F401
+    from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:  # deterministic fallback sampler
     import functools
@@ -21,7 +21,7 @@ except ImportError:  # deterministic fallback sampler
         def __init__(self, sample):
             self.sample = sample
 
-    class st:  # noqa: N801  (mirrors the hypothesis module name)
+    class st:  # mirrors the hypothesis module name
         @staticmethod
         def integers(min_value, max_value):
             return _Strategy(lambda r: r.randint(min_value, max_value))

@@ -221,7 +221,7 @@ def test_generate_eos_rows_finish_at_different_steps():
     common = set(row0) & set(row1)
     if common:
         # both rows emit it -> the loop stops when the LATER row finishes
-        eos = sorted(common)[0]
+        eos = min(common)
         i0, i1 = row0.index(eos), row1.index(eos)
         want_steps = max(i0, i1)
         ends = ((0, i0), (1, i1))

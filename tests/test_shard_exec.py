@@ -47,16 +47,15 @@ def run_py(code: str, devices: int = 8, timeout: int = 560) -> str:
 
 # ------------------------------------------------------------ unit layer
 
-def test_shard_policy_object_and_shims():
-    """ShardPolicy is an explicit value object; two policies coexist;
-    the old set_policy/get_policy globals survive as deprecated shims."""
+def test_shard_policy_object_and_no_global_shims():
+    """ShardPolicy is an explicit value object; two policies coexist per
+    call; the deprecated mutable-global shims are gone for good and the
+    module default is an immutable constant."""
     out = run_py("""
-        import warnings
         import jax
         from jax.sharding import PartitionSpec as P
         from repro.distributed import ShardPolicy
-        from repro.distributed.sharding import (get_policy, param_specs,
-                                                set_policy)
+        from repro.distributed import sharding
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         p2d, pf = ShardPolicy("2d"), ShardPolicy("fsdp")
         assert p2d.dp_axes(mesh) == ("data",)
@@ -68,16 +67,16 @@ def test_shard_policy_object_and_shims():
         # per call, with no global mutated in between
         shapes = {"mlp": {"up": {"w": jax.ShapeDtypeStruct((8, 16),
                                                            "float32")}}}
-        s2 = param_specs(shapes, mesh, p2d)["mlp"]["up"]["w"].spec
-        sf = param_specs(shapes, mesh, pf)["mlp"]["up"]["w"].spec
+        s2 = sharding.param_specs(shapes, mesh, p2d)["mlp"]["up"]["w"].spec
+        sf = sharding.param_specs(shapes, mesh, pf)["mlp"]["up"]["w"].spec
         assert s2 == P("data", "model"), s2
         assert sf == P(("data", "model")), sf
-        with warnings.catch_warnings(record=True) as w:
-            warnings.simplefilter("always")
-            set_policy("fsdp")
-            assert get_policy() == "fsdp"
-            set_policy("2d")
-        assert all(issubclass(x.category, DeprecationWarning) for x in w)
+        # the mutable-global era is over: no setter survives (ACC04), the
+        # default is a frozen value, and resolve_policy prefers the arg
+        for shim in ("set_policy", "get_policy"):
+            assert not hasattr(sharding, shim), shim
+        assert sharding.resolve_policy(None) == ShardPolicy("2d")
+        assert sharding.resolve_policy(pf) is pf
         try:
             ShardPolicy("bogus")
         except ValueError:
